@@ -1,0 +1,75 @@
+"""Benchmark 4 — the (arch x shape) roofline table from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and prints
+the 3-term roofline per cell: compute / memory / collective seconds,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, roofline-MFU.  Does not
+compile anything itself (run `python -m repro.launch.dryrun --all` first).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+COLS = [
+    ("arch", 18), ("shape", 11), ("mesh", 6), ("attn_mode", 9),
+    ("t_compute_s", 11), ("t_memory_s", 11), ("t_collective_s", 11),
+    ("bottleneck", 10), ("useful_flops_ratio", 9), ("mfu_at_roofline", 8),
+    ("mem_GiB", 8),
+]
+
+
+def load_rows(pattern: str = "*.json"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, pattern))):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("error"):
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d.get("mesh", "?"), "bottleneck": "ERROR"})
+            continue
+        if d.get("skipped"):
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d.get("mesh", "?"), "bottleneck": "SKIP"})
+            continue
+        pm = d.get("peak_memory_per_device") or 0
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "attn_mode": d.get("attn_mode", "-"),
+            "t_compute_s": d["t_compute_s"], "t_memory_s": d["t_memory_s"],
+            "t_collective_s": d["t_collective_s"],
+            "bottleneck": d["bottleneck"],
+            "useful_flops_ratio": d["useful_flops_ratio"],
+            "mfu_at_roofline": d["mfu_at_roofline"],
+            "mem_GiB": pm / 2**30,
+            "variant": d.get("variant", "baseline"),
+        })
+    return rows
+
+
+def _fmt(v, width):
+    if isinstance(v, float):
+        s = f"{v:.3e}" if (v and abs(v) < 1e-2) else f"{v:.3f}"
+    else:
+        s = str(v)
+    return s.ljust(width)[:max(width, len(s))]
+
+
+def main():
+    rows = load_rows()
+    if not rows:
+        print("no dry-run artifacts found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return []
+    print(" | ".join(name.ljust(w) for name, w in COLS))
+    print("-" * (sum(w for _, w in COLS) + 3 * len(COLS)))
+    for r in rows:
+        print(" | ".join(_fmt(r.get(name, "-"), w) for name, w in COLS))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

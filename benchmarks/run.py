@@ -1,0 +1,95 @@
+"""Benchmark runner: one function per paper table/figure.
+
+  resource_table     Table I analogue (conventional vs parameterized HLO resources)
+  compile_time       Sec. V-E analogue (overlay compile / map / reconfig gap)
+  sobel_throughput   Sec. IV demo (four execution paths of the same Sobel)
+  roofline_table     arch x shape roofline from dry-run artifacts (§Roofline)
+
+Prints ``name,us_per_call,derived`` CSV rows at the end for machine
+consumption, after the human-readable tables.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import compile_time, resource_table, roofline_table, sobel_throughput
+
+    csv_rows = [("name", "us_per_call", "derived")]
+    failures = []
+
+    print("=" * 72)
+    print("Benchmark 1: resource table (paper Table I analogue)")
+    print("=" * 72)
+    try:
+        rows = resource_table.main()
+        for r in rows:
+            csv_rows.append((
+                f"resource/{r['component']}",
+                "",
+                f"total_ops_reduction={r['total_ops_reduction_pct']:.1f}%",
+            ))
+    except Exception as e:
+        traceback.print_exc()
+        failures.append(("resource_table", e))
+
+    print()
+    print("=" * 72)
+    print("Benchmark 2: compilation gap (paper Sec. V-E analogue)")
+    print("=" * 72)
+    try:
+        rows = compile_time.main()
+        for r in rows:
+            csv_rows.append((f"compile/{r['stage']}", f"{r['seconds']*1e6:.1f}", ""))
+    except Exception as e:
+        traceback.print_exc()
+        failures.append(("compile_time", e))
+
+    print()
+    print("=" * 72)
+    print("Benchmark 3: Sobel execution paths (paper Sec. IV demo)")
+    print("=" * 72)
+    try:
+        rows = sobel_throughput.main()
+        for r in rows:
+            csv_rows.append((
+                f"sobel/{r['impl']}", f"{r['us_per_image']:.1f}",
+                f"speedup={r['speedup_vs_conv']:.2f}",
+            ))
+    except Exception as e:
+        traceback.print_exc()
+        failures.append(("sobel_throughput", e))
+
+    print()
+    print("=" * 72)
+    print("Benchmark 4: roofline table (arch x shape, from dry-run artifacts)")
+    print("=" * 72)
+    try:
+        rows = roofline_table.main()
+        for r in rows:
+            if r.get("bottleneck") not in ("SKIP", "ERROR", None):
+                csv_rows.append((
+                    f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                    f"{r['t_compute_s']*1e6 if isinstance(r.get('t_compute_s'), float) else 0:.1f}",
+                    f"bottleneck={r['bottleneck']};mfu={r.get('mfu_at_roofline', 0):.4f}",
+                ))
+    except Exception as e:
+        traceback.print_exc()
+        failures.append(("roofline_table", e))
+
+    print()
+    print("name,us_per_call,derived")
+    for name, us, derived in csv_rows[1:]:
+        print(f"{name},{us},{derived}")
+
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) FAILED: {[f[0] for f in failures]}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Pixie-JAX: the Pixie VCGRA overlay (Kulkarni, Stroobandt et al., 2017)
+reproduced in JAX, inside a multi-pod TPU training/inference framework.
+
+Subpackages: core (the paper), kernels (Pallas), models, configs,
+parallel, data, optim, checkpoint, runtime, train, serve, launch,
+roofline.  See README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

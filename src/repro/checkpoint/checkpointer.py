@@ -1,0 +1,164 @@
+"""Sharded, atomic, async checkpointing (tensorstore-free).
+
+Layout per step:
+
+    <dir>/step_<N>.tmp/          (written first)
+        arrays.npz               flattened leaves, key = escaped tree path
+        manifest.json            step, leaf paths/shapes/dtypes, wall time
+    <dir>/step_<N>/              (atomic rename = commit)
+
+Fault-tolerance contract (runtime/fault_tolerance.py builds on this):
+* a checkpoint is valid iff its manifest is present in a committed dir --
+  a crash mid-write leaves only a .tmp dir, which restore ignores and
+  cleanup deletes;
+* ``restore_latest`` walks committed steps newest-first and falls back if
+  a dir is unreadable (torn disk), so a corrupted newest checkpoint costs
+  one interval, never the run;
+* arrays are saved from host RAM; the async path snapshots to host first
+  (jax.device_get) then writes on a worker thread, overlapping I/O with
+  the next training steps.
+* on restore, leaves are re-placed with ``jax.device_put`` against the
+  *current* sharding -- restoring onto a different mesh (elastic resize)
+  reshards transparently.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[BaseException] = None
+
+    # -- write ------------------------------------------------------------
+
+    def save(self, step: int, tree, blocking: bool = True) -> None:
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if blocking:
+            self._write(step, host_tree)
+        else:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write_safe, args=(step, host_tree), daemon=True
+            )
+            self._thread.start()
+
+    def _write_safe(self, step: int, host_tree) -> None:
+        try:
+            self._write(step, host_tree)
+        except BaseException as e:  # surfaced on next wait()
+            self._last_error = e
+
+    def _write(self, step: int, host_tree) -> None:
+        tmp = os.path.join(self.dir, f"step_{step}.tmp")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_tree)
+        arrays = {f"a{i}": leaf for i, (_, leaf) in enumerate(flat)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "leaves": [
+                {"key": k, "idx": i, "shape": list(np.shape(l)),
+                 "dtype": str(np.asarray(l).dtype)}
+                for i, (k, l) in enumerate(flat)
+            ],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # commit point
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(self.committed_steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # -- read -------------------------------------------------------------
+
+    def committed_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                    out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, step: int, like, shardings=None):
+        """Restore into the structure of `like` (a pytree of arrays or
+        ShapeDtypeStructs); `shardings` optionally re-places leaves."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat_like, treedef = jax.tree_util.tree_flatten(like)
+        leaves = [data[f"a{i}"] for i in range(len(manifest["leaves"]))]
+        if len(leaves) != len(flat_like):
+            raise ValueError(
+                f"checkpoint has {len(leaves)} leaves, target {len(flat_like)}"
+            )
+        if shardings is not None:
+            flat_sh = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+            )
+            leaves = [jax.device_put(l, s) for l, s in zip(leaves, flat_sh)]
+        else:
+            leaves = [
+                jax.numpy.asarray(l, dtype=fl.dtype) for l, fl in zip(leaves, flat_like)
+            ]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_latest(self, like, shardings=None):
+        """(step, tree) from the newest readable checkpoint, or (None, None)."""
+        for step in reversed(self.committed_steps()):
+            try:
+                return step, self.restore(step, like, shardings)
+            except Exception:
+                continue  # torn checkpoint: fall back to the previous one
+        return None, None
+
+    def cleanup_tmp(self) -> int:
+        n = 0
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+                n += 1
+        return n

@@ -1,0 +1,38 @@
+"""Pixie: a heterogeneous Virtual CGRA overlay, reproduced in JAX for TPU.
+
+The paper's primary contribution -- an overlay architecture (PE grid +
+virtual channels) with a fast application-mapping tool flow and a
+parameterized-configuration optimization -- implemented as a composable
+JAX system:
+
+  dfg          dataflow-graph IR (the toolchain input)
+  synthesis    textual description -> PE netlist
+  grid         grid specification + generator tool (Eq. 1-3 resource model)
+  place        mapper/placer (BUF-carrier insertion, NONE fill)
+  route        VC mux-select router
+  bitstream    settings ("bitstream") assembly
+  interpreter  conventional execution: compile-once overlay, settings as data
+  specialize   parameterized execution: constant-propagated specialization
+  pixie        the top-level accelerator facade (timed stages)
+  analysis     HLO resource census (Table I analogue)
+  applications Sobel & friends (paper Sec. IV demonstrator)
+"""
+
+from repro.core.bitstream import VCGRAConfig, assemble
+from repro.core.dfg import DFG, InRef, NodeRef, reference_eval
+from repro.core.grid import GridSpec, for_dfg, paper_4x4, rectangular, sobel_grid
+from repro.core.ops import Op
+from repro.core.pixie import Pixie, map_app, sobel_pixie
+from repro.core.place import Placement, PlacementError, level_demand, place
+from repro.core.route import Routing, RoutingError, route
+from repro.core.synthesis import SOBEL_SOURCE, synthesize
+
+__all__ = [
+    "DFG", "InRef", "NodeRef", "reference_eval",
+    "GridSpec", "for_dfg", "paper_4x4", "rectangular", "sobel_grid",
+    "Op", "Pixie", "map_app", "sobel_pixie",
+    "Placement", "PlacementError", "level_demand", "place",
+    "Routing", "RoutingError", "route",
+    "VCGRAConfig", "assemble",
+    "SOBEL_SOURCE", "synthesize",
+]

@@ -1,0 +1,111 @@
+"""Settings ("bitstream") assembly for the Pixie overlay.
+
+The specialization stage of the paper's tool flow combines the PaR result
+with the parameterized components into reconfiguration bitstreams.  Our
+configuration is the exact software analogue: per-level PE opcode vectors
+plus per-level VC mux-select tables.  In the *conventional* path these are
+runtime arrays (settings registers updated over a bus -> swapping them
+never recompiles anything); in the *parameterized* path they are baked
+constants (micro-reconfiguration -> re-specialization = re-jit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.grid import GridSpec
+from repro.core.place import Placement
+from repro.core.route import Routing
+
+
+@dataclasses.dataclass
+class VCGRAConfig:
+    """The full settings of one application mapped on one grid."""
+
+    app_name: str
+    grid_name: str
+    opcodes: List[np.ndarray]        # per level: int32 [pes_in_level]
+    selects: List[np.ndarray]        # per level: int32 [pes_in_level, 2]
+    out_sel: np.ndarray              # int32 [num_outputs]
+    input_order: Tuple[str, ...]     # memory-VC channel ordering
+    const_values: Dict[str, float]   # default coefficient values
+
+    # -- conventional-path form (settings registers as device arrays) ------
+
+    def to_jax(self):
+        return (
+            tuple(jnp.asarray(o) for o in self.opcodes),
+            tuple(jnp.asarray(s) for s in self.selects),
+            jnp.asarray(self.out_sel),
+        )
+
+    # -- size accounting (the "bitstream size" analogue) --------------------
+
+    def settings_words(self) -> int:
+        return int(
+            sum(o.size for o in self.opcodes)
+            + sum(s.size for s in self.selects)
+            + self.out_sel.size
+        )
+
+    def settings_bits(self, grid: GridSpec) -> int:
+        bits = 4 * sum(int(o.size) for o in self.opcodes)
+        for lvl, s in enumerate(self.selects):
+            bw = max(1, math.ceil(math.log2(max(grid.vc_in_width(lvl), 2))))
+            bits += bw * int(s.size)
+        out_bw = max(1, math.ceil(math.log2(max(grid.pes_per_level[-1], 2))))
+        bits += out_bw * int(self.out_sel.size)
+        return bits
+
+    # -- (de)serialization ---------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "app_name": self.app_name,
+                "grid_name": self.grid_name,
+                "opcodes": [o.tolist() for o in self.opcodes],
+                "selects": [s.tolist() for s in self.selects],
+                "out_sel": self.out_sel.tolist(),
+                "input_order": list(self.input_order),
+                "const_values": self.const_values,
+            }
+        )
+
+    @staticmethod
+    def from_json(text: str) -> "VCGRAConfig":
+        d = json.loads(text)
+        return VCGRAConfig(
+            app_name=d["app_name"],
+            grid_name=d["grid_name"],
+            opcodes=[np.asarray(o, dtype=np.int32) for o in d["opcodes"]],
+            selects=[np.asarray(s, dtype=np.int32).reshape(-1, 2) for s in d["selects"]],
+            out_sel=np.asarray(d["out_sel"], dtype=np.int32),
+            input_order=tuple(d["input_order"]),
+            const_values={k: float(v) for k, v in d["const_values"].items()},
+        )
+
+
+def assemble(placement: Placement, routing: Routing, grid: GridSpec) -> VCGRAConfig:
+    """PaR result + grid -> settings (paper's specialization-stage input)."""
+    opcodes: List[np.ndarray] = []
+    for lvl, cells in enumerate(placement.cells):
+        ops = np.zeros((grid.pes_per_level[lvl],), dtype=np.int32)  # NONE fill
+        for slot, c in enumerate(cells):
+            ops[slot] = int(c.op)
+        opcodes.append(ops)
+    return VCGRAConfig(
+        app_name=placement.dfg.name,
+        grid_name=grid.name,
+        opcodes=opcodes,
+        selects=[s.copy() for s in routing.sel],
+        out_sel=routing.out_sel.copy(),
+        input_order=tuple(placement.dfg.inputs),
+        const_values=dict(placement.dfg.const_values),
+    )

@@ -1,0 +1,159 @@
+"""Pixie: the top-level VCGRA overlay accelerator facade.
+
+Mirrors the paper's operational model end to end:
+
+  overlay compile (once)      <->  XLA jit of the generic interpreter
+  map application (<1 s)      <->  synthesis + place + route + settings gen
+  reconfigure (ms)            <->  conventional: swap settings arrays
+                                   parameterized: re-jit specialized fn
+  execute                     <->  run the pipelined PE grid on pixel batch
+
+All stages are wall-clock timed; the timings feed the compilation-gap
+benchmark (paper Sec. V-E: <1 s mapping vs ~1200 s FPGA compile).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import applications as apps
+from repro.core import grid as gridlib
+from repro.core import interpreter, specialize
+from repro.core.bitstream import VCGRAConfig, assemble
+from repro.core.dfg import DFG
+from repro.core.grid import GridSpec
+from repro.core.place import place
+from repro.core.route import route
+
+
+def map_app(dfg: DFG, grid: GridSpec) -> VCGRAConfig:
+    """The full VCGRA tool flow: netlist -> placement -> routing -> settings."""
+    placement = place(dfg, grid)
+    routing = route(placement, grid)
+    return assemble(placement, routing, grid)
+
+
+class Pixie:
+    """A virtual CGRA instance.
+
+    mode='conventional'  settings are runtime arrays; reconfiguration is a
+                         buffer swap and never recompiles (compile-once
+                         overlay).
+    mode='parameterized' settings are baked constants; reconfiguration
+                         re-specializes (re-jits) but executes a leaner
+                         datapath (paper's TLUT/TCON flow).
+    """
+
+    def __init__(
+        self,
+        grid: GridSpec,
+        mode: str = "conventional",
+        bake_consts: bool = False,
+    ):
+        if mode not in ("conventional", "parameterized"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.grid = grid
+        self.mode = mode
+        self.bake_consts = bake_consts
+        self.config: Optional[VCGRAConfig] = None
+        self._overlay_fn: Optional[Callable] = None
+        self._config_jax = None
+        self._spec_fn: Optional[Callable] = None
+        self.timings: Dict[str, float] = {}
+
+    # -- stage 1: overlay compile (the "1200 s" FPGA-compile analogue) ------
+
+    def compile_overlay(self, batch: int = 1024) -> float:
+        """AOT-compile the generic interpreter for this grid structure.
+        Only meaningful (and only needed) in conventional mode."""
+        t0 = time.perf_counter()
+        self._overlay_fn = interpreter.make_overlay_fn(self.grid)
+        if self.mode == "conventional":
+            dummy_cfg = self._dummy_config().to_jax()
+            x = jnp.zeros((self.grid.num_inputs, batch), self.grid.dtype)
+            self._overlay_fn.lower(dummy_cfg, x).compile()
+        dt = time.perf_counter() - t0
+        self.timings["overlay_compile_s"] = dt
+        return dt
+
+    def _dummy_config(self) -> VCGRAConfig:
+        g = self.grid
+        return VCGRAConfig(
+            app_name="<dummy>",
+            grid_name=g.name,
+            opcodes=[np.zeros((p,), np.int32) for p in g.pes_per_level],
+            selects=[np.zeros((p, 2), np.int32) for p in g.pes_per_level],
+            out_sel=np.zeros((g.num_outputs,), np.int32),
+            input_order=tuple(f"i{k}" for k in range(g.num_inputs)),
+            const_values={},
+        )
+
+    # -- stage 2: map an application (the "<1 s" analogue) -------------------
+
+    def map(self, dfg: DFG) -> VCGRAConfig:
+        t0 = time.perf_counter()
+        config = map_app(dfg, self.grid)
+        self.timings["map_s"] = time.perf_counter() - t0
+        return config
+
+    # -- stage 3: (micro-)reconfiguration ------------------------------------
+
+    def load(self, config: VCGRAConfig, batch: int = 1024) -> float:
+        """Install `config`; returns the reconfiguration wall time."""
+        t0 = time.perf_counter()
+        self.config = config
+        if self.mode == "conventional":
+            self._config_jax = config.to_jax()  # settings-register write
+        else:
+            self._spec_fn = specialize.jit_specialized(
+                self.grid, config, bake_consts=self.bake_consts
+            )
+            x = jnp.zeros((self.grid.num_inputs, batch), self.grid.dtype)
+            self._spec_fn.lower(x).compile()    # micro-reconfiguration
+        dt = time.perf_counter() - t0
+        self.timings["reconfig_s"] = dt
+        return dt
+
+    def run_dfg(self, dfg: DFG, **inputs) -> jnp.ndarray:
+        """map + load + run in one call (convenience)."""
+        self.load(self.map(dfg))
+        return self(**inputs)
+
+    # -- stage 4: execution ----------------------------------------------------
+
+    def run_raw(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: [num_inputs, batch] -> y: [num_outputs, batch]."""
+        if self.config is None:
+            raise RuntimeError("no application loaded; call load() first")
+        if self.mode == "conventional":
+            if self._overlay_fn is None:
+                self.compile_overlay(batch=x.shape[-1])
+            return self._overlay_fn(self._config_jax, x)
+        return self._spec_fn(x)
+
+    def __call__(self, **inputs) -> jnp.ndarray:
+        if self.config is None:
+            raise RuntimeError("no application loaded; call load() first")
+        x = interpreter.pack_inputs(self.config, inputs, self.grid.dtype)
+        return self.run_raw(x)
+
+    def run_image(self, image: jnp.ndarray) -> jnp.ndarray:
+        """Run a loaded stencil application over a full [H, W] image."""
+        if self.config is None:
+            raise RuntimeError("no application loaded; call load() first")
+        H, W = image.shape
+        taps = apps.stencil_inputs(image)
+        feed = {k: v for k, v in taps.items() if k in self.config.input_order}
+        y = self(**feed)
+        return y.reshape((-1, H, W))[0] if y.shape[0] == 1 else y.reshape((-1, H, W))
+
+
+def sobel_pixie(mode: str = "conventional", data_bits: int = 32) -> Pixie:
+    """The paper's demonstrator: Sobel on the 45-PE/4-VC grid (Sec. IV)."""
+    pix = Pixie(gridlib.sobel_grid(data_bits=data_bits), mode=mode)
+    return pix

@@ -1,0 +1,6 @@
+from repro.data.tokens import TokenPipeline
+from repro.data.imaging import PixiePreprocessor, patch_embed_stub, synthetic_images
+
+__all__ = [
+    "TokenPipeline", "PixiePreprocessor", "patch_embed_stub", "synthetic_images",
+]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots (validated interpret=True):
+
+  vcgra/            the paper's PE-grid executor, VMEM-tiled
+                    (specialized + conventional/scalar-prefetch variants)
+  stencil/          fused 3x3 stencil -- the beyond-paper roofline target
+  flash_attention/  chunked GQA decode attention for long-context serving
+
+Each package: <name>_kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jitted wrappers), ref.py (pure-jnp oracle).
+"""

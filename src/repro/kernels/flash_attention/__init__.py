@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import decode_attention
+from repro.kernels.flash_attention.ref import decode_ref
+
+__all__ = ["decode_attention", "decode_ref"]

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: chunked (flash) decode attention with GQA.
+
+Used by the serving engine for the ``decode_32k`` / ``long_500k`` shapes:
+one new query token per sequence attends over a long KV cache.  The cache
+is streamed HBM -> VMEM in ``chunk`` slices with an online-softmax
+accumulator in VMEM scratch, so VMEM holds O(chunk * head_dim) instead of
+the full cache -- the standard flash-decoding structure, laid out for the
+TPU memory hierarchy (sublane = chunk, lane = head_dim; accumulation in
+f32 regardless of cache dtype).
+
+Grid: (batch, kv_heads, seq_chunks); the chunk axis is 'arbitrary'
+(sequential) so the scratch carries across chunks.  Per-sequence valid
+lengths arrive via scalar prefetch (SMEM), masking trailing cache slots.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_body(
+    chunk: int,
+    lengths_ref,   # SMEM int32 [B]
+    q_ref,         # [1, 1, Hg, D]
+    k_ref,         # [1, chunk, 1, D]
+    v_ref,         # [1, chunk, 1, D]
+    o_ref,         # [1, 1, Hg, D]
+    m_ref,         # VMEM f32 [Hg, 1]   running max
+    l_ref,         # VMEM f32 [Hg, 1]   running denominator
+    acc_ref,       # VMEM f32 [Hg, D]   running numerator
+):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    n_chunks = pl.num_programs(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # [Hg, D]
+    k = k_ref[0, :, 0].astype(jnp.float32)       # [chunk, D]
+    v = v_ref[0, :, 0].astype(jnp.float32)       # [chunk, D]
+
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # [Hg, chunk]
+    scores *= q.shape[-1] ** -0.5
+
+    pos = s * chunk + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    valid = pos < lengths_ref[b]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...]                          # [Hg, 1]
+    m_cur = jnp.max(scores, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)              # rescale of old accumulator
+    p = jnp.exp(scores - m_new)                  # [Hg, chunk]
+    p = jnp.where(valid, p, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(s == n_chunks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,        # [B, H, D]
+    k: jnp.ndarray,        # [B, S, G, D]
+    v: jnp.ndarray,        # [B, S, G, D]
+    lengths: jnp.ndarray,  # [B] int32 valid cache lengths
+    chunk: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """GQA flash decode: one query per sequence over an [S]-long cache."""
+    B, H, D = q.shape
+    _, S, G, _ = k.shape
+    assert H % G == 0, f"{H} query heads not divisible into {G} KV groups"
+    Hg = H // G
+    assert S % chunk == 0, f"cache len {S} not a multiple of chunk {chunk}"
+    qg = q.reshape(B, G, Hg, D)
+
+    body = functools.partial(_decode_body, chunk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, G, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hg, D), lambda b, g, s, *_: (b, g, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, D), lambda b, g, s, *_: (b, s, g, 0)),
+            pl.BlockSpec((1, chunk, 1, D), lambda b, g, s, *_: (b, s, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hg, D), lambda b, g, s, *_: (b, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hg, 1), jnp.float32),
+            pltpu.VMEM((Hg, 1), jnp.float32),
+            pltpu.VMEM((Hg, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((B, G, Hg, D), q.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
+        if hasattr(pltpu, "CompilerParams")
+        else None,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, D)

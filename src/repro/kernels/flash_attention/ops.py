@@ -1,0 +1,15 @@
+"""Jitted wrapper for the flash decode attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_kernel import flash_decode
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def decode_attention(q, k, v, lengths, chunk: int = 512, interpret: bool = True):
+    """GQA decode attention: q [B,H,D] over cache k/v [B,S,G,D]."""
+    return flash_decode(q, k, v, lengths, chunk=chunk, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for GQA flash decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_ref(
+    q: jnp.ndarray,        # [B, H, D]
+    k: jnp.ndarray,        # [B, S, G, D]
+    v: jnp.ndarray,        # [B, S, G, D]
+    lengths: jnp.ndarray,  # [B]
+) -> jnp.ndarray:
+    B, H, D = q.shape
+    _, S, G, _ = k.shape
+    Hg = H // G
+    qg = q.reshape(B, G, Hg, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bghd,bsgd->bghs", qg, kf) * (D ** -0.5)   # [B,G,Hg,S]
+    mask = jnp.arange(S)[None, :] < lengths[:, None]               # [B,S]
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bghs,bsgd->bghd", p, vf)
+    return out.reshape(B, H, D).astype(q.dtype)

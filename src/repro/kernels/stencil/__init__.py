@@ -1,0 +1,4 @@
+from repro.kernels.stencil.ops import conv3x3_fused, sobel_magnitude_fused
+from repro.kernels.stencil.ref import stencil_ref
+
+__all__ = ["conv3x3_fused", "sobel_magnitude_fused", "stencil_ref"]

@@ -1,0 +1,31 @@
+"""Jitted wrappers for the fused stencil kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core import applications as apps
+from repro.kernels.stencil.stencil_kernel import stencil_fused
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_h"))
+def sobel_magnitude_fused(image, interpret: bool = True, block_h: int = 8):
+    """Fully fused |Gx|+|Gy| Sobel magnitude (the beyond-paper fast path)."""
+    return stencil_fused(
+        image, (apps.SOBEL_X, apps.SOBEL_Y), block_h=block_h, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "interpret", "block_h"))
+def conv3x3_fused(image, kernel_name: str, interpret: bool = True, block_h: int = 8):
+    kq = {
+        "sobel_x": apps.SOBEL_X,
+        "sobel_y": apps.SOBEL_Y,
+        "gauss3": apps.GAUSS3,
+        "sharpen": apps.SHARPEN,
+        "laplace": apps.LAPLACE,
+        "box3": apps.BOX3,
+    }[kernel_name]
+    return stencil_fused(image, (kq,), block_h=block_h, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused stencil kernel."""
+
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def stencil_ref(
+    image: jnp.ndarray,
+    kernels: Tuple[Tuple[Tuple[float, ...], ...], ...],
+) -> jnp.ndarray:
+    H, W = image.shape
+    pad = jnp.pad(image, 1)
+    outs = []
+    for kq in kernels:
+        acc = jnp.zeros((H, W), image.dtype)
+        for r, dj in enumerate((-1, 0, 1)):
+            for c, di in enumerate((-1, 0, 1)):
+                coeff = float(kq[r][c])
+                if coeff == 0.0:
+                    continue
+                acc = acc + coeff * pad[1 + dj : 1 + dj + H, 1 + di : 1 + di + W]
+        outs.append(acc)
+    if len(outs) == 2:
+        return jnp.abs(outs[0]) + jnp.abs(outs[1])
+    return outs[0]

@@ -1,0 +1,4 @@
+from repro.kernels.vcgra.ops import vcgra_apply, vcgra_apply_image
+from repro.kernels.vcgra.ref import vcgra_ref
+
+__all__ = ["vcgra_apply", "vcgra_apply_image", "vcgra_ref"]

@@ -1,0 +1,81 @@
+"""Jitted public wrappers for the VCGRA Pallas kernels.
+
+Handles batch padding to lane-aligned blocks, image packing/unpacking, and
+exposes the same (grid, config, inputs) contract as the core interpreter so
+the kernel drops into the Pixie facade transparently.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import applications as apps
+from repro.core.bitstream import VCGRAConfig
+from repro.core.grid import GridSpec
+from repro.core.interpreter import pack_inputs
+from repro.kernels.vcgra.vcgra_kernel import (
+    LANE,
+    _pack_settings,
+    vcgra_conventional,
+    vcgra_specialized,
+)
+
+
+def _pad_batch(x: jnp.ndarray, block_n: int):
+    n = x.shape[-1]
+    rem = (-n) % block_n
+    if rem:
+        x = jnp.pad(x, ((0, 0), (0, rem)))
+    return x, n
+
+
+def vcgra_apply(
+    grid: GridSpec,
+    config: VCGRAConfig,
+    x: jnp.ndarray,
+    mode: str = "specialized",
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Run a mapped application over a channel-major batch [num_inputs, N]."""
+    xp, n = _pad_batch(x, block_n)
+    if mode == "specialized":
+        fn = jax.jit(
+            functools.partial(
+                vcgra_specialized, grid, config, block_n=block_n, interpret=interpret
+            )
+        )
+        y = fn(xp)
+    elif mode == "conventional":
+        ops_arr, sel_arr, out_sel, _ = _pack_settings(grid, config)
+        fn = jax.jit(
+            functools.partial(
+                vcgra_conventional, grid, block_n=block_n, interpret=interpret
+            )
+        )
+        y = fn((ops_arr, sel_arr, out_sel), xp)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return y[:, :n]
+
+
+def vcgra_apply_image(
+    grid: GridSpec,
+    config: VCGRAConfig,
+    image: jnp.ndarray,
+    mode: str = "specialized",
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Stencil-app convenience: [H, W] image -> [H, W] (or [K, H, W]) output."""
+    H, W = image.shape
+    taps = apps.stencil_inputs(image)
+    feed = {k: v for k, v in taps.items() if k in config.input_order}
+    x = pack_inputs(config, feed, grid.dtype)
+    y = vcgra_apply(grid, config, x, mode=mode, block_n=block_n, interpret=interpret)
+    y = y.reshape((-1, H, W))
+    return y[0] if y.shape[0] == 1 else y

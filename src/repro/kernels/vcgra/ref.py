@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the VCGRA grid-executor kernel.
+
+Semantics: identical to the conventional overlay interpreter
+(`repro.core.interpreter.overlay_step`) -- gather-routed, generic-PE,
+level-pipelined execution of a mapped application over a pixel batch.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.bitstream import VCGRAConfig
+from repro.core.grid import GridSpec
+from repro.core.interpreter import overlay_step
+
+
+def vcgra_ref(grid: GridSpec, config: VCGRAConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [num_inputs, batch] -> y: [num_outputs, batch]."""
+    return overlay_step(grid, config.to_jax(), x)

@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: the VCGRA grid executor.
+
+TPU-native adaptation of the Pixie pipeline (see DESIGN.md): the pixel
+stream is tiled HBM -> VMEM in lane-aligned blocks, and the PE-level
+pipeline of the overlay executes per tile entirely in VMEM/VREGs.  Two
+variants mirror the paper's two implementations:
+
+* **specialized** (parameterized configuration): the settings are trace-
+  time constants; each PE emits exactly its configured functional unit and
+  every VC mux folds into direct SSA wiring.  This is the TLUT/TCON
+  analogue and the fast path.
+
+* **conventional**: the settings live in SMEM (scalar-prefetched, the
+  settings-register analogue); every PE evaluates the full functional-unit
+  mux chain and routing is performed with dynamic row selects against the
+  previous level's VMEM value matrix.  Same executable serves every
+  application mapped on the grid -- at the cost the paper's Table I
+  quantifies.
+
+Block layout: inputs are stacked channel-major ``[num_inputs, N]`` where N
+is the flattened pixel batch; blocks are ``(num_inputs, block_n)`` with
+``block_n`` a multiple of 128 (lane width).  The level pipeline is fully
+unrolled inside the kernel: VMEM working set is
+``O(max_level_width * block_n)`` elements.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import ops as pe_ops
+from repro.core.bitstream import VCGRAConfig
+from repro.core.grid import GridSpec
+from repro.core.ops import Op
+from repro.core.specialize import _live_slots
+
+LANE = 128
+
+
+# -- specialized kernel --------------------------------------------------------
+
+
+def _specialized_body(grid: GridSpec, config: VCGRAConfig, x_ref, o_ref):
+    """Kernel body with config burned in: a pure unrolled dataflow pipeline."""
+    x = x_ref[...]
+    dtype = x.dtype
+    live = _live_slots(grid, config)
+    const_idx = {}
+    prev = {}
+    for lvl in range(grid.num_levels):
+        cur = {}
+        for slot in sorted(live[lvl]):
+            op = Op(int(config.opcodes[lvl][slot]))
+            if op == Op.NONE:
+                cur[slot] = jnp.zeros(x.shape[1:], dtype)
+                continue
+            sa = int(config.selects[lvl][slot, 0])
+            sb = int(config.selects[lvl][slot, 1])
+            a = x[sa] if lvl == 0 else prev[sa]
+            b = a if op in pe_ops.UNARY_OPS else (x[sb] if lvl == 0 else prev[sb])
+            cur[slot] = pe_ops.apply_op(op, a, b)
+        prev = cur
+    rows = [prev[int(s)] for s in config.out_sel]
+    o_ref[...] = jnp.stack(rows, axis=0)
+
+
+def vcgra_specialized(
+    grid: GridSpec,
+    config: VCGRAConfig,
+    x: jnp.ndarray,
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Specialized-path pallas executor.  x: [num_inputs, N] (N % block_n == 0)."""
+    n_in, n = x.shape
+    assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
+    assert block_n % LANE == 0, f"block_n must be lane-aligned (x{LANE})"
+    body = functools.partial(_specialized_body, grid, config)
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((grid.num_outputs, n), x.dtype),
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((n_in, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((grid.num_outputs, block_n), lambda i: (0, i)),
+        interpret=interpret,
+    )(x)
+
+
+# -- conventional kernel ---------------------------------------------------------
+
+
+def _conventional_body(grid: GridSpec, max_w: int, op_ref, sel_ref, out_ref, x_ref, o_ref):
+    """Settings in SMEM; generic PEs; dynamic routing selects.
+
+    op_ref:  SMEM int32 [num_levels, max_w]
+    sel_ref: SMEM int32 [num_levels, max_w, 2]
+    out_ref: SMEM int32 [num_outputs]
+    """
+    x = x_ref[...]                      # [num_inputs, block_n]
+    dtype = x.dtype
+    prev = x
+    for lvl in range(grid.num_levels):  # grid structure static, settings not
+        width = grid.pes_per_level[lvl]
+        a_rows = []
+        b_rows = []
+        for slot in range(width):
+            sa = sel_ref[lvl, slot, 0]
+            sb = sel_ref[lvl, slot, 1]
+            a_rows.append(jax.lax.dynamic_index_in_dim(prev, sa, 0, keepdims=False))
+            b_rows.append(jax.lax.dynamic_index_in_dim(prev, sb, 0, keepdims=False))
+        a = jnp.stack(a_rows, axis=0)
+        b = jnp.stack(b_rows, axis=0)
+        opcodes = jnp.stack([op_ref[lvl, s] for s in range(width)])
+        prev = pe_ops.apply_generic(opcodes, a, b)
+    rows = [
+        jax.lax.dynamic_index_in_dim(prev, out_ref[k], 0, keepdims=False)
+        for k in range(grid.num_outputs)
+    ]
+    o_ref[...] = jnp.stack(rows, axis=0).astype(dtype)
+
+
+def _pack_settings(grid: GridSpec, config: VCGRAConfig):
+    import numpy as np
+
+    max_w = max(grid.pes_per_level)
+    ops_arr = np.zeros((grid.num_levels, max_w), np.int32)
+    sel_arr = np.zeros((grid.num_levels, max_w, 2), np.int32)
+    for lvl in range(grid.num_levels):
+        w = grid.pes_per_level[lvl]
+        ops_arr[lvl, :w] = config.opcodes[lvl]
+        sel_arr[lvl, :w] = config.selects[lvl]
+    return jnp.asarray(ops_arr), jnp.asarray(sel_arr), jnp.asarray(config.out_sel), max_w
+
+
+def vcgra_conventional(
+    grid: GridSpec,
+    config_arrays: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    x: jnp.ndarray,
+    block_n: int = 1024,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Conventional-path pallas executor: one executable per *grid*, any
+    application's packed settings arrays accepted at runtime."""
+    ops_arr, sel_arr, out_sel = config_arrays
+    n_in, n = x.shape
+    assert n % block_n == 0 and block_n % LANE == 0
+    max_w = ops_arr.shape[1]
+    body = functools.partial(_conventional_body, grid, max_w)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((n_in, block_n), lambda i, *_: (0, i))],
+        out_specs=pl.BlockSpec(
+            (grid.num_outputs, block_n), lambda i, *_: (0, i)
+        ),
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((grid.num_outputs, n), x.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(ops_arr, sel_arr, out_sel, x)

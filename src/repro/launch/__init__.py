@@ -1,0 +1,6 @@
+# Launchers: mesh.py (production meshes), dryrun.py (multi-pod lower+compile
+# matrix), train.py / serve.py CLIs.  dryrun must be executed as
+# `python -m repro.launch.dryrun` so its XLA_FLAGS line runs first.
+from repro.launch.mesh import make_host_mesh, make_production_mesh, mesh_desc
+
+__all__ = ["make_host_mesh", "make_production_mesh", "mesh_desc"]

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run forces 512 placeholder host devices
+*before* any jax initialisation; tests see the single real device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds the 2-pod axis (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh over the real local device (CPU tests/examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_desc(mesh) -> str:
+    return "x".join(
+        f"{mesh.shape[a]}{a}" for a in mesh.axis_names
+    )

@@ -1,0 +1,285 @@
+"""GQA/MQA attention: query-chunked training/prefill path + cached decode.
+
+Memory discipline: the training/prefill path never materialises the full
+[S, S] score matrix -- queries are processed in ``chunk_q`` blocks via
+``lax.scan`` (scores peak at [B, G, Hg, chunk_q, S] f32), which is what
+makes 32k-token prefill of the assigned archs fit a 16 GB v5e alongside
+remat.  Decode updates the cache with per-sequence dynamic slices and
+attends over the full (possibly sequence-sharded) cache.
+
+Masking supports: causal, sliding-window (``window > 0``), and
+bidirectional-prefix (PaliGemma-style prefix-LM over ``prefix_len``
+leading positions).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, rope, truncated_normal
+from repro.parallel.axes import constrain
+
+NEG_INF = -2.0e38
+
+
+def pick_chunk(S: int, chunk: int) -> int:
+    """Largest divisor of S that is <= chunk (handles meta-token-extended
+    sequence lengths that are not powers of two)."""
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+def init_attention(key, d: int, num_heads: int, num_kv_heads: int, head_dim: int) -> Params:
+    """3D weight layout: explicit (heads, head_dim) axes so the sharding
+    plan can pick head-sharding (Megatron TP) or head_dim-sharding
+    (contraction TP) per architecture without reshape barriers."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d ** -0.5
+    so = (num_heads * head_dim) ** -0.5
+    G = num_kv_heads
+    Hg = num_heads // G
+    return {
+        "wq": truncated_normal(kq, (d, G, Hg, head_dim), s),
+        "wk": truncated_normal(kk, (d, G, head_dim), s),
+        "wv": truncated_normal(kv, (d, G, head_dim), s),
+        "wo": truncated_normal(ko, (G, Hg, head_dim, d), so),
+    }
+
+
+def _project_qkv(params, x, G, Hg, head_dim, positions, rope_theta):
+    """x: [B, S, D] -> q [B,S,G,Hg,hd] (roped), k, v [B,S,G,hd] (k roped)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dghk->bsghk", x, params["wq"])
+    k = jnp.einsum("bsd,dgk->bsgk", x, params["wk"])
+    v = jnp.einsum("bsd,dgk->bsgk", x, params["wv"])
+    q = rope(
+        q.reshape(B, S, G * Hg, head_dim), positions, rope_theta
+    ).reshape(B, S, G, Hg, head_dim)
+    k = rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _mask(
+    pos_q: jnp.ndarray,   # [Sq]
+    pos_k: jnp.ndarray,   # [Sk]
+    window: int,
+    prefix_len: int,
+) -> jnp.ndarray:
+    """[Sq, Sk] boolean allowed-attention mask."""
+    causal = pos_k[None, :] <= pos_q[:, None]
+    allowed = causal
+    if prefix_len > 0:
+        both_prefix = (pos_q[:, None] < prefix_len) & (pos_k[None, :] < prefix_len)
+        allowed = allowed | both_prefix
+    if window > 0:
+        in_window = pos_q[:, None] - pos_k[None, :] < window
+        if prefix_len > 0:
+            both_prefix = (pos_q[:, None] < prefix_len) & (pos_k[None, :] < prefix_len)
+            allowed = allowed & (in_window | both_prefix)
+        else:
+            allowed = allowed & in_window
+    return allowed
+
+
+def _sdpa(q, k, v, mask):
+    """q: [B,Sq,G,Hg,D]  k,v: [B,Sk,G,D]  mask: [Sq,Sk] -> [B,Sq,G,Hg,D]."""
+    D = q.shape[-1]
+    scores = jnp.einsum(
+        "bqghd,bkgd->bghqk", q, k, preferred_element_type=jnp.float32
+    ) * (D ** -0.5)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bghqk,bkgd->bqghd", p.astype(v.dtype), v)
+    return out
+
+
+def attention_train(
+    params: Params,
+    x: jnp.ndarray,             # [B, S, D]
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int = 0,
+    prefix_len: int = 0,
+    chunk_q: int = 512,
+    return_kv: bool = False,
+    seq_shard: bool = False,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill), query-chunked.
+
+    ``seq_shard``: sequence-parallel attention for archs whose head counts
+    don't divide the model axis (MQA/ragged GQA) -- queries are sharded
+    along the sequence over 'model' (replicated weights, gathered K/V), so
+    attention compute parallelises across the TP axis without the
+    [Sq, Sk]-score all-reduce of contraction TP.  Costs one [B, S, D]
+    gather per layer; see EXPERIMENTS.md §Perf.
+    """
+    B, S, _ = x.shape
+    G = num_kv_heads
+    Hg = num_heads // G
+    positions = jnp.arange(S)
+
+    q, k, v = _project_qkv(params, x, G, Hg, head_dim, positions[None], rope_theta)
+    if seq_shard:
+        # keys/values fully gathered (small: G*hd per token); queries
+        # sequence-sharded -> scores sharded on Sq, no score collectives.
+        k = constrain(k, "batch", None, None, None)
+        v = constrain(v, "batch", None, None, None)
+        q = constrain(q, "batch", "model", None, None, None)
+
+    cq = pick_chunk(S, chunk_q)
+    n_chunks = S // cq
+
+    # banded K/V: a sliding-window chunk only sees the last (window + cq)
+    # keys -- slicing the band cuts score compute/memory from O(cq*S) to
+    # O(cq*(window+cq)) for the local layers (gemma3 5:1, hymba; §Perf)
+    band = window + cq
+    use_band = window > 0 and prefix_len == 0 and band < S and n_chunks > 1
+
+    if n_chunks == 1:
+        out = _sdpa(q, k, v, _mask(positions, positions, window, prefix_len))
+    else:
+        qc = q.reshape(B, n_chunks, cq, G, Hg, head_dim)
+
+        def body(carry, inp):
+            i, qb = inp
+            pos_q = i * cq + jnp.arange(cq)
+            if use_band:
+                start = jnp.clip(i * cq - window, 0, S - band)
+                kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+                vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+                pos_k = start + jnp.arange(band)
+            else:
+                kb, vb, pos_k = k, v, positions
+            mask = _make_dynamic_mask(pos_q, pos_k, window, prefix_len)
+            ob = _sdpa(qb, kb, vb, mask)
+            return carry, ob
+
+        # remat: recompute the per-chunk scores/softmax in backward instead
+        # of saving [B, Hq, cq, S] f32 residuals per chunk (~8 GB/layer).
+        body = jax.checkpoint(body, prevent_cse=False)
+        _, out = jax.lax.scan(
+            body, None, (jnp.arange(n_chunks), qc.swapaxes(0, 1))
+        )
+        out = out.swapaxes(0, 1).reshape(B, S, G, Hg, head_dim)
+
+    y = jnp.einsum("bsghk,ghkd->bsd", out, params["wo"])
+    if seq_shard:
+        y = constrain(y, "batch", None, None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def _make_dynamic_mask(pos_q, pos_k, window: int, prefix_len: int):
+    """Same rule as `_mask` but with traced query positions (scan body)."""
+    causal = pos_k[None, :] <= pos_q[:, None]
+    allowed = causal
+    if prefix_len > 0:
+        both_prefix = (pos_q[:, None] < prefix_len) & (pos_k[None, :] < prefix_len)
+        allowed = allowed | both_prefix
+        if window > 0:
+            in_window = pos_q[:, None] - pos_k[None, :] < window
+            allowed = allowed & (in_window | both_prefix)
+    elif window > 0:
+        allowed = allowed & (pos_q[:, None] - pos_k[None, :] < window)
+    return allowed
+
+
+def attention_decode(
+    params: Params,
+    x: jnp.ndarray,                       # [B, 1, D] current-token activations
+    cache: Tuple[jnp.ndarray, jnp.ndarray],  # k,v: [B, S, G, hd]
+    lengths: jnp.ndarray,                 # [B] current cache fill (== position)
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window: int = 0,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """One-token decode over a KV cache; returns (y, updated cache)."""
+    B, _, _ = x.shape
+    G = num_kv_heads
+    Hg = num_heads // G
+    k_cache, v_cache = cache
+    S = k_cache.shape[1]
+
+    q, k_new, v_new = _project_qkv(
+        params, x, G, Hg, head_dim, lengths[:, None], rope_theta
+    )
+
+    def upd(c, new, l):
+        return jax.lax.dynamic_update_slice(c, new.astype(c.dtype), (l, 0, 0))
+
+    k_cache = jax.vmap(upd)(k_cache, k_new, lengths)
+    v_cache = jax.vmap(upd)(v_cache, v_new, lengths)
+
+    pos_k = jnp.arange(S)
+    scores = jnp.einsum(
+        "bqghd,bkgd->bghqk", q, k_cache, preferred_element_type=jnp.float32
+    ) * (head_dim ** -0.5)
+    valid = pos_k[None, :] <= lengths[:, None]                  # [B, S]
+    if window > 0:
+        valid = valid & (lengths[:, None] - pos_k[None, :] < window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bghqk,bkgd->bqghd", p.astype(v_cache.dtype), v_cache)
+    y = jnp.einsum("bsghk,ghkd->bsd", out, params["wo"])
+    return y, (k_cache, v_cache)
+
+
+def attention_decode_ring(
+    params: Params,
+    x: jnp.ndarray,                          # [B, 1, D]
+    cache: Tuple[jnp.ndarray, jnp.ndarray],  # k,v: [B, W, G, hd] ring buffers
+    lengths: jnp.ndarray,                    # [B] absolute position
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Sliding-window decode with an O(window) ring-buffer cache.
+
+    The buffer always holds the last ``W`` positions (keys stored
+    post-RoPE at absolute positions, so slot order is irrelevant to the
+    attention math); the window constraint is enforced *structurally* by
+    eviction rather than by masking.
+    """
+    B = x.shape[0]
+    G = num_kv_heads
+    Hg = num_heads // G
+    k_cache, v_cache = cache
+    W = k_cache.shape[1]
+
+    q, k_new, v_new = _project_qkv(
+        params, x, G, Hg, head_dim, lengths[:, None], rope_theta
+    )
+
+    slots = lengths % W
+
+    def upd(c, new, s):
+        return jax.lax.dynamic_update_slice(c, new.astype(c.dtype), (s, 0, 0))
+
+    k_cache = jax.vmap(upd)(k_cache, k_new, slots)
+    v_cache = jax.vmap(upd)(v_cache, v_new, slots)
+
+    scores = jnp.einsum(
+        "bqghd,bkgd->bghqk", q, k_cache, preferred_element_type=jnp.float32
+    ) * (head_dim ** -0.5)
+    # slots 0..min(length, W-1) are filled; once wrapped, all are valid.
+    valid = jnp.arange(W)[None, :] <= lengths[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bghqk,bkgd->bqghd", p.astype(v_cache.dtype), v_cache)
+    y = jnp.einsum("bsghk,ghkd->bsd", out, params["wo"])
+    return y, (k_cache, v_cache)

@@ -1,0 +1,480 @@
+"""Per-kind transformer blocks: init / train-apply / decode-apply / cache.
+
+One module owns the layer-kind dispatch so the LM stack (`models/lm.py`)
+can scan a *pattern* of heterogeneous kinds (dense, local, global, moe,
+mlstm, slstm, hymba, hymba_g) with uniform plumbing:
+
+    init_block(key, cfg, kind)                    -> params pytree
+    block_train(params, cfg, kind, x)             -> (x', aux_loss)
+    block_decode(params, cfg, kind, x, cache, l)  -> (x', cache')
+    init_block_cache(cfg, kind, batch, seq)       -> zeroed cache pytree
+
+Window ("local"/"hymba") kinds keep a **ring-buffer** KV cache of
+``min(window, seq)`` slots -- for the ``long_500k`` shape this is what
+turns a 500k-token context into an O(window) memory footprint on the
+attention side (the SSM side is O(state) by construction).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import linear_rnn as lrnn
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    Params, init_mlp, init_rmsnorm, mlp, rmsnorm, truncated_normal,
+)
+from repro.parallel.axes import constrain, constrain_time_mixer
+
+ATTN_KINDS = ("dense", "local", "global", "moe")
+CONV_K = 4
+
+
+def _window_for(cfg: ArchConfig, kind: str) -> int:
+    if kind in ("local", "hymba"):
+        return cfg.window
+    return 0  # dense / global / moe / hymba_g: full attention
+
+
+def _mlstm_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    inner = 2 * cfg.d_model                 # projection factor 2
+    heads = cfg.num_heads
+    return inner, heads, inner // heads
+
+
+def _slstm_ff(cfg: ArchConfig) -> int:
+    return ((int(cfg.d_model * 4 / 3) + 63) // 64) * 64
+
+
+def _hymba_dims(cfg: ArchConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    return s.num_heads * s.head_dim, s.num_heads, s.head_dim  # inner, H, P
+
+
+# -- init -----------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig, kind: str) -> Params:
+    D = cfg.d_model
+    keys = jax.random.split(key, 8)
+    if kind in ATTN_KINDS:
+        p: Params = {
+            "ln_attn": init_rmsnorm(D),
+            "attn": attn.init_attention(
+                keys[0], D, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            ),
+            "ln_mlp": init_rmsnorm(D),
+        }
+        if kind == "moe":
+            p["moe"] = moe_lib.init_moe(keys[1], D, cfg.d_ff, cfg.moe, cfg.mlp_type)
+        else:
+            p["mlp"] = init_mlp(keys[1], D, cfg.d_ff, cfg.mlp_type)
+        return p
+
+    if kind == "mlstm":
+        inner, H, dh = _mlstm_dims(cfg)
+        return {
+            "ln": init_rmsnorm(D),
+            "w_up": truncated_normal(keys[0], (D, 2 * inner), D ** -0.5),
+            "conv_w": truncated_normal(keys[1], (CONV_K, inner), 0.1),
+            "w_q": truncated_normal(keys[2], (H, dh, dh), dh ** -0.5),
+            "w_k": truncated_normal(keys[3], (H, dh, dh), dh ** -0.5),
+            "w_gates": truncated_normal(keys[4], (inner, 2 * H), inner ** -0.5),
+            "b_gates": jnp.concatenate(
+                [jnp.full((H,), 2.0), jnp.zeros((H,))]  # forget-gate bias +2
+            ),
+            "w_down": truncated_normal(keys[5], (inner, D), inner ** -0.5),
+        }
+
+    if kind == "slstm":
+        return {
+            "ln": init_rmsnorm(D),
+            "slstm": lrnn.init_slstm(keys[0], D, cfg.num_heads),
+            "ln_mlp": init_rmsnorm(D),
+            "mlp": init_mlp(keys[1], D, _slstm_ff(cfg), "swiglu"),
+        }
+
+    if kind in ("hymba", "hymba_g"):
+        inner, H, P = _hymba_dims(cfg)
+        N = cfg.ssm.state_dim
+        return {
+            "ln": init_rmsnorm(D),
+            "attn": attn.init_attention(
+                keys[0], D, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+            ),
+            "ssm_in": truncated_normal(keys[1], (D, 2 * inner), D ** -0.5),
+            "ssm_bc": truncated_normal(keys[2], (D, 2 * H * N), D ** -0.5),
+            "ssm_dt": truncated_normal(keys[3], (D, H), D ** -0.5),
+            "ssm_dt_bias": jnp.zeros((H,)),
+            "ssm_a_log": jnp.zeros((H,)),
+            "ssm_out": truncated_normal(keys[4], (inner, D), inner ** -0.5),
+            "norm_attn_out": init_rmsnorm(D),
+            "norm_ssm_out": init_rmsnorm(inner),
+            "mix_beta": jnp.zeros((2,)),            # learned branch scales
+            "ln_mlp": init_rmsnorm(D),
+            "mlp": init_mlp(keys[5], D, cfg.d_ff, cfg.mlp_type),
+        }
+
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+# -- train / prefill -------------------------------------------------------------
+
+
+def block_train(
+    params: Params,
+    cfg: ArchConfig,
+    kind: str,
+    x: jnp.ndarray,
+    prefix_len: int = 0,
+    chunk_q: int = 512,
+    seq_shard: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block application.  Returns (x', aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        h = rmsnorm(params["ln_attn"], x)
+        h = attn.attention_train(
+            params["attn"], h,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=_window_for(cfg, kind), prefix_len=prefix_len,
+            chunk_q=chunk_q, seq_shard=seq_shard,
+        )
+        x = x + h
+        h = rmsnorm(params["ln_mlp"], x)
+        if kind == "moe":
+            h, aux = moe_lib.moe_ffn_ep(params["moe"], h, cfg.moe, cfg.mlp_type)
+        else:
+            h = mlp(params["mlp"], h, cfg.mlp_type)
+        return x + h, aux
+
+    if kind == "mlstm":
+        y, _ = _mlstm_seq(params, cfg, rmsnorm(params["ln"], x), state=None)
+        return x + y, aux
+
+    if kind == "slstm":
+        h = rmsnorm(params["ln"], x)
+        if x.shape[1] > 1:
+            h = constrain_time_mixer(h)  # time scan: keep S local
+        h, _ = lrnn.slstm_scan(params["slstm"], h, cfg.num_heads)
+        x = x + h
+        h = mlp(params["mlp"], rmsnorm(params["ln_mlp"], x), "swiglu")
+        return x + h, aux
+
+    if kind in ("hymba", "hymba_g"):
+        h = rmsnorm(params["ln"], x)
+        a = attn.attention_train(
+            params["attn"], h,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=_window_for(cfg, kind), prefix_len=prefix_len,
+            chunk_q=chunk_q, seq_shard=seq_shard,
+        )
+        s, _ = _hymba_ssm_seq(params, cfg, h, state=None)
+        x = x + _hymba_mix(params, a, s)
+        h = mlp(params["mlp"], rmsnorm(params["ln_mlp"], x), cfg.mlp_type)
+        return x + h, aux
+
+    raise ValueError(kind)
+
+
+def _mlstm_seq(params, cfg: ArchConfig, h, state, return_state: bool = False):
+    """mLSTM inner: up-proj, causal conv, per-head qk, chunked GLA, gate."""
+    inner, H, dh = _mlstm_dims(cfg)
+    B, L, _ = h.shape
+    if L > 1:
+        # recurrent chunk scan: keep S local, absorb idle axes into batch
+        h = constrain_time_mixer(h)
+    up = h @ params["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)
+    if state is None:
+        c = lrnn.causal_conv1d(u, params["conv_w"])
+        conv_buf = None
+    else:
+        (gla_state, conv_buf) = state
+        c, conv_buf = lrnn.causal_conv1d_step(u[:, 0], params["conv_w"], conv_buf)
+        c = c[:, None]
+    c = jax.nn.silu(c)
+    ch = c.reshape(B, L, H, dh)
+    q = jnp.einsum("blhd,hde->blhe", ch, params["w_q"])
+    k = jnp.einsum("blhd,hde->blhe", ch, params["w_k"]) * (dh ** -0.5)
+    v = u.reshape(B, L, H, dh)
+    gates = u @ params["w_gates"] + params["b_gates"]          # [B,L,2H]
+    f_raw, i_raw = jnp.split(gates, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    i_gate = jax.nn.sigmoid(i_raw)
+    if state is None:
+        y, gla_final = lrnn.gla_chunked(
+            q, k, v, log_f, i_gate, normalize=True,
+            chunk=min(cfg.ssm.chunk if cfg.ssm else 256, L),
+        )
+        new_state = None
+        if return_state:
+            pad = max(0, (CONV_K - 1) - L)
+            tail = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))[:, -(CONV_K - 1):]
+            new_state = (gla_final, tail.astype(jnp.float32))
+    else:
+        y1, new_gla = lrnn.gla_step(
+            q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], i_gate[:, 0],
+            gla_state, normalize=True,
+        )
+        y = y1[:, None]
+        new_state = (new_gla, conv_buf)
+    y = y.reshape(B, L, inner) * jax.nn.silu(z)
+    out = y @ params["w_down"]
+    return out, new_state
+
+
+def _hymba_ssm_seq(params, cfg: ArchConfig, h, state, return_state: bool = False):
+    """Mamba2-style scalar-decay SSM branch (chunked GLA core)."""
+    inner, H, P = _hymba_dims(cfg)
+    N = cfg.ssm.state_dim
+    B, L, _ = h.shape
+    if L > 1:
+        h = constrain_time_mixer(h)  # chunk scan: keep S local
+    xz = h @ params["ssm_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)                           # [B,L,inner]
+    bc = h @ params["ssm_bc"]
+    bmat, cmat = jnp.split(bc.reshape(B, L, H, 2 * N), 2, axis=-1)
+    dt = jax.nn.softplus(h @ params["ssm_dt"] + params["ssm_dt_bias"])  # [B,L,H]
+    a = -jnp.exp(params["ssm_a_log"])                           # [H] (< 0)
+    log_f = dt * a
+    i_gate = dt
+    v = xs.reshape(B, L, H, P)
+    k = bmat * (N ** -0.5)
+    q = cmat
+    if state is None:
+        y, final = lrnn.gla_chunked(
+            q, k, v, log_f, i_gate, normalize=False, chunk=min(cfg.ssm.chunk, L)
+        )
+        new_state = final if return_state else None
+    else:
+        y1, new_state = lrnn.gla_step(
+            q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], i_gate[:, 0],
+            state, normalize=False,
+        )
+        y = y1[:, None]
+    y = y.reshape(B, L, inner) * jax.nn.silu(z)
+    return y, new_state
+
+
+def _hymba_mix(params, a, s):
+    """Normalized, learned-scale fusion of attention and SSM branches.
+
+    Cast back to the branch dtype: the f32 beta scalars would otherwise
+    promote the residual stream to f32 for the whole rest of the stack
+    (2x activation memory; caught by the dry-run §Perf log)."""
+    beta = jax.nn.sigmoid(params["mix_beta"]) * 2.0
+    an = rmsnorm(params["norm_attn_out"], a)
+    sn = rmsnorm(params["norm_ssm_out"], s) @ params["ssm_out"]
+    return (0.5 * (beta[0] * an + beta[1] * sn)).astype(a.dtype)
+
+
+# -- prefill -----------------------------------------------------------------------
+
+
+def _store_kv(k: jnp.ndarray, cache_len: int, window: int) -> jnp.ndarray:
+    """Pack prefill keys/values into a decode cache buffer.
+
+    Full-attention kinds: left-aligned into a [B, cache_len, ...] buffer.
+    Window kinds: ring layout -- last min(W, S) positions at slot pos % W,
+    matching `attention_decode_ring`'s indexing.
+    """
+    B, S, G, hd = k.shape
+    k = k.astype(jnp.bfloat16)
+    if window > 0:
+        W = min(cache_len, window)
+        Wv = min(W, S)
+        slots = jnp.arange(S - Wv, S) % W
+        buf = jnp.zeros((B, W, G, hd), jnp.bfloat16)
+        return buf.at[:, slots].set(k[:, S - Wv :])
+    buf = jnp.zeros((B, cache_len, G, hd), jnp.bfloat16)
+    return jax.lax.dynamic_update_slice(buf, k, (0, 0, 0, 0))
+
+
+def block_prefill(
+    params: Params,
+    cfg: ArchConfig,
+    kind: str,
+    x: jnp.ndarray,
+    cache_len: int,
+    prefix_len: int = 0,
+    chunk_q: int = 512,
+    seq_shard: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence application that also emits the decode cache."""
+    window = _window_for(cfg, kind)
+    if kind in ATTN_KINDS:
+        h = rmsnorm(params["ln_attn"], x)
+        h, (k, v) = attn.attention_train(
+            params["attn"], h,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=window, prefix_len=prefix_len, chunk_q=chunk_q,
+            return_kv=True, seq_shard=seq_shard,
+        )
+        x = x + h
+        h = rmsnorm(params["ln_mlp"], x)
+        if kind == "moe":
+            h, _ = moe_lib.moe_ffn_ep(params["moe"], h, cfg.moe, cfg.mlp_type)
+        else:
+            h = mlp(params["mlp"], h, cfg.mlp_type)
+        cache = {
+            "k": _store_kv(k, cache_len, window),
+            "v": _store_kv(v, cache_len, window),
+        }
+        return x + h, cache
+
+    if kind == "mlstm":
+        y, ((S, n), conv) = _mlstm_seq(
+            params, cfg, rmsnorm(params["ln"], x), state=None, return_state=True
+        )
+        return x + y, {"S": S, "n": n, "conv": conv}
+
+    if kind == "slstm":
+        h = rmsnorm(params["ln"], x)
+        if x.shape[1] > 1:
+            h = constrain_time_mixer(h)
+        h, (c, n, hs) = lrnn.slstm_scan(params["slstm"], h, cfg.num_heads)
+        x = x + h
+        h2 = mlp(params["mlp"], rmsnorm(params["ln_mlp"], x), "swiglu")
+        return x + h2, {"c": c, "n": n, "h": hs}
+
+    if kind in ("hymba", "hymba_g"):
+        h = rmsnorm(params["ln"], x)
+        a, (k, v) = attn.attention_train(
+            params["attn"], h,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=window, prefix_len=prefix_len, chunk_q=chunk_q,
+            return_kv=True, seq_shard=seq_shard,
+        )
+        s, (S, n) = _hymba_ssm_seq(params, cfg, h, state=None, return_state=True)
+        x = x + _hymba_mix(params, a, s)
+        h2 = mlp(params["mlp"], rmsnorm(params["ln_mlp"], x), cfg.mlp_type)
+        cache = {
+            "k": _store_kv(k, cache_len, window),
+            "v": _store_kv(v, cache_len, window),
+            "S": S,
+            "n": n,
+        }
+        return x + h2, cache
+
+    raise ValueError(kind)
+
+
+# -- decode -----------------------------------------------------------------------
+
+
+def block_decode(
+    params: Params,
+    cfg: ArchConfig,
+    kind: str,
+    x: jnp.ndarray,              # [B, 1, D]
+    cache: Dict[str, jnp.ndarray],
+    lengths: jnp.ndarray,        # [B]
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    if kind in ATTN_KINDS:
+        h = rmsnorm(params["ln_attn"], x)
+        h, kv = _attn_decode(params["attn"], cfg, kind, h, cache, lengths)
+        x = x + h
+        h = rmsnorm(params["ln_mlp"], x)
+        if kind == "moe":
+            h, _ = moe_lib.moe_ffn_ep(
+                params["moe"], h, cfg.moe, cfg.mlp_type, dropless=True
+            )
+        else:
+            h = mlp(params["mlp"], h, cfg.mlp_type)
+        return x + h, kv
+
+    if kind == "mlstm":
+        state = ((cache["S"], cache["n"]), cache["conv"])
+        y, ((S, n), conv) = _mlstm_seq(params, cfg, rmsnorm(params["ln"], x), state)
+        return x + y, {"S": S, "n": n, "conv": conv}
+
+    if kind == "slstm":
+        h = rmsnorm(params["ln"], x)
+        y, (c, n, hs) = lrnn.slstm_step(
+            params["slstm"], h[:, 0], cfg.num_heads,
+            (cache["c"], cache["n"], cache["h"]),
+        )
+        x = x + y[:, None]
+        h2 = mlp(params["mlp"], rmsnorm(params["ln_mlp"], x), "swiglu")
+        return x + h2, {"c": c, "n": n, "h": hs}
+
+    if kind in ("hymba", "hymba_g"):
+        h = rmsnorm(params["ln"], x)
+        a, kv = _attn_decode(params["attn"], cfg, kind, h, cache, lengths)
+        s, (S, n) = _hymba_ssm_seq(params, cfg, h, (cache["S"], cache["n"]))
+        x = x + _hymba_mix(params, a, s)
+        h2 = mlp(params["mlp"], rmsnorm(params["ln_mlp"], x), cfg.mlp_type)
+        return x + h2, {**kv, "S": S, "n": n}
+
+    raise ValueError(kind)
+
+
+def _attn_decode(aparams, cfg: ArchConfig, kind: str, h, cache, lengths):
+    window = _window_for(cfg, kind)
+    if window > 0:  # ring cache sized min(seq, window); eviction == mask
+        y, (k, v) = attn.attention_decode_ring(
+            aparams, h, (cache["k"], cache["v"]), lengths,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+        )
+    else:
+        y, (k, v) = attn.attention_decode(
+            aparams, h, (cache["k"], cache["v"]), lengths,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=window,
+        )
+    return y, {"k": k, "v": v}
+
+
+# -- cache specs -------------------------------------------------------------------
+
+
+def init_block_cache(cfg: ArchConfig, kind: str, batch: int, seq: int):
+    """Zeroed decode cache for one layer of `kind` (dtype bf16 for KV)."""
+
+    def kv_len() -> int:
+        w = _window_for(cfg, kind)
+        return min(seq, w) if w > 0 else seq
+
+    G, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind in ATTN_KINDS:
+        s = kv_len()
+        return {
+            "k": jnp.zeros((batch, s, G, hd), jnp.bfloat16),
+            "v": jnp.zeros((batch, s, G, hd), jnp.bfloat16),
+        }
+    if kind == "mlstm":
+        inner, H, dh = _mlstm_dims(cfg)
+        return {
+            "S": jnp.zeros((batch, H, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, H, dh), jnp.float32),
+            "conv": jnp.zeros((batch, CONV_K - 1, inner), jnp.float32),
+        }
+    if kind == "slstm":
+        H = cfg.num_heads
+        dh = cfg.d_model // H
+        z = jnp.zeros((batch, H, dh), jnp.float32)
+        return {"c": z, "n": z, "h": z}
+    if kind in ("hymba", "hymba_g"):
+        inner, H, P = _hymba_dims(cfg)
+        N = cfg.ssm.state_dim
+        s = kv_len()
+        return {
+            "k": jnp.zeros((batch, s, G, hd), jnp.bfloat16),
+            "v": jnp.zeros((batch, s, G, hd), jnp.bfloat16),
+            "S": jnp.zeros((batch, H, N, P), jnp.float32),
+            "n": jnp.zeros((batch, H, N), jnp.float32),
+        }
+    raise ValueError(kind)

@@ -1,0 +1,117 @@
+"""Shared primitive layers: RMSNorm, RoPE, MLP variants, embeddings.
+
+Plain-function + pytree-param style (no flax): every layer is an
+``init_*(key, ...) -> params`` factory plus a pure ``apply`` function, so
+``jax.eval_shape`` over the init gives allocation-free parameter specs for
+the dry-run, and scan-stacking is a plain ``jax.vmap`` over init keys.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def truncated_normal(key, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# -- RMSNorm -------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(dtype)
+
+
+# -- RoPE ----------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: [..., S] (int).  Rotates pairs (d, d+D/2)."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                       # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -- MLP variants ---------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, mlp_type: str) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    if mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": truncated_normal(k1, (d, f), s_in),
+            "w_up": truncated_normal(k2, (d, f), s_in),
+            "w_down": truncated_normal(k3, (f, d), s_out),
+        }
+    if mlp_type == "gelu":  # non-gated (starcoder2, musicgen)
+        return {
+            "w_up": truncated_normal(k1, (d, f), s_in),
+            "w_down": truncated_normal(k2, (f, d), s_out),
+        }
+    raise ValueError(f"unknown mlp_type {mlp_type!r}")
+
+
+def mlp(params: Params, x: jnp.ndarray, mlp_type: str) -> jnp.ndarray:
+    if mlp_type == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+        return h @ params["w_down"]
+    act = jax.nn.silu if mlp_type == "swiglu" else jax.nn.gelu
+    g = act(x @ params["w_gate"])
+    u = x @ params["w_up"]
+    return (g * u) @ params["w_down"]
+
+
+def mlp_flops(d: int, f: int, mlp_type: str, tokens: int) -> float:
+    mats = 2 if mlp_type == "gelu" else 3
+    return 2.0 * mats * d * f * tokens
+
+
+# -- Embedding -------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, tie: bool) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"table": truncated_normal(k1, (vocab, d), 0.02)}
+    if not tie:
+        p["unembed"] = truncated_normal(k2, (d, vocab), d ** -0.5)
+    return p
+
+
+def embed(params: Params, tokens: jnp.ndarray, scale: bool, d: int) -> jnp.ndarray:
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(d ** 0.5, x.dtype)
+    return x
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits in f32 regardless of compute dtype (CE numerics)."""
+    w = params.get("unembed")
+    if w is not None:
+        return jnp.einsum("...d,dv->...v", x, w, preferred_element_type=jnp.float32)
+    return jnp.einsum(
+        "...d,vd->...v", x, params["table"], preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,204 @@
+"""Linear-recurrent sequence mixers: chunked gated linear attention (GLA)
+core shared by xLSTM's mLSTM and Hymba's SSM heads, plus the sequential
+sLSTM.
+
+TPU adaptation (DESIGN.md): instead of porting a GPU selective-scan, the
+recurrence
+
+    S_t = f_t * S_{t-1} + i_t * k_t v_t^T        (matrix state per head)
+    y_t = q_t . S_t   [optionally / max(|q_t . n_t|, 1)]
+
+is evaluated **chunkwise**: within a chunk the contribution is a masked
+quadratic form (two MXU matmuls), across chunks a short ``lax.scan``
+carries the [dk, dv] state -- the Mamba-2/SSD & chunked-mLSTM structure,
+which keeps the MXU busy and the VMEM working set at O(chunk^2 + dk*dv).
+
+Gate conventions: ``log_f`` (log forget) <= 0 and ``i_gate`` in [0, 1]
+(sigmoid), so every chunk weight exp(log-sum) stays in [0, 1] -- stable
+without the running-max machinery (a simplification of xLSTM's
+exponential gating; recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, truncated_normal
+
+GLAState = Tuple[jnp.ndarray, jnp.ndarray]  # S: [B,H,dk,dv], n: [B,H,dk]
+
+
+def gla_chunked(
+    q: jnp.ndarray,        # [B, L, H, dk]
+    k: jnp.ndarray,        # [B, L, H, dk]
+    v: jnp.ndarray,        # [B, L, H, dv]
+    log_f: jnp.ndarray,    # [B, L, H]  (<= 0)
+    i_gate: jnp.ndarray,   # [B, L, H]  (in [0, 1])
+    state: Optional[GLAState] = None,
+    normalize: bool = False,
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, GLAState]:
+    B, L, H, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, L)
+    while L % c:  # largest divisor of L <= chunk (meta-token raggedness)
+        c -= 1
+    nc = L // c
+
+    if state is None:
+        S0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+    else:
+        S0, n0 = state
+
+    def to_chunks(x):
+        return x.reshape(B, nc, c, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    fs, is_ = to_chunks(log_f), to_chunks(i_gate)
+
+    def body(carry, inp):
+        S, n = carry
+        qb, kb, vb, fb, ib = inp                    # [B,c,H,*]
+        qb = qb.astype(jnp.float32)
+        kb = kb.astype(jnp.float32)
+        vb = vb.astype(jnp.float32)
+        P = jnp.cumsum(fb, axis=1)                  # [B,c,H] inclusive logs
+        Ptot = P[:, -1]                             # [B,H]
+
+        # inter-chunk: queries read the carried state, decayed to their slot
+        q_dec = qb * jnp.exp(P)[..., None]
+        y_inter = jnp.einsum("bthd,bhdv->bthv", q_dec, S)
+        n_inter = jnp.einsum("bthd,bhd->bth", q_dec, n)
+
+        # intra-chunk: masked decayed quadratic form
+        gap = P[:, :, None, :] - P[:, None, :, :]   # [B,t,s,H]
+        tril = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(tril[None, :, :, None], jnp.exp(gap) * ib[:, None], 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qb, kb) * w
+        y_intra = jnp.einsum("btsh,bshv->bthv", scores, vb)
+
+        y = y_inter + y_intra
+
+        if normalize:
+            # n_t = decayed carry + intra contribution of k's
+            kn = jnp.einsum("btsh,bshd->bthd", w, kb)          # sum_s w ks
+            qn = jnp.einsum("bthd,bthd->bth", qb, kn) + n_inter
+            denom = jnp.maximum(jnp.abs(qn), 1.0)
+            y = y / denom[..., None]
+
+        # state update to chunk end
+        decay_to_end = jnp.exp(Ptot[:, None] - P) * ib          # [B,c,H]
+        k_dec = kb * decay_to_end[..., None]
+        S_new = jnp.exp(Ptot)[:, :, None, None] * S + jnp.einsum(
+            "bshd,bshv->bhdv", k_dec, vb
+        )
+        n_new = jnp.exp(Ptot)[:, :, None] * n + k_dec.sum(axis=1)
+        return (S_new, n_new), y
+
+    (Sf, nf), ys = jax.lax.scan(body, (S0, n0), (qs, ks, vs, fs, is_))
+    y = ys.swapaxes(0, 1).reshape(B, L, H, dv).astype(v.dtype)
+    return y, (Sf, nf)
+
+
+def gla_step(
+    q: jnp.ndarray,       # [B, H, dk]
+    k: jnp.ndarray,
+    v: jnp.ndarray,       # [B, H, dv]
+    log_f: jnp.ndarray,   # [B, H]
+    i_gate: jnp.ndarray,  # [B, H]
+    state: GLAState,
+    normalize: bool = False,
+) -> Tuple[jnp.ndarray, GLAState]:
+    """Single decode step of the same recurrence."""
+    S, n = state
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    f = jnp.exp(log_f)[..., None]
+    S_new = f[..., None] * S + (i_gate[..., None] * kf)[..., None] * vf[..., None, :]
+    n_new = f * n + i_gate[..., None] * kf
+    y = jnp.einsum("bhd,bhdv->bhv", qf, S_new)
+    if normalize:
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)), 1.0)
+        y = y / denom[..., None]
+    return y.astype(v.dtype), (S_new, n_new)
+
+
+# -- causal depthwise conv (mLSTM / mamba front-end) ---------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, L, C]; w: [K, C] depthwise causal convolution."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(K):
+        out = out + xp[:, j : j + x.shape[1], :] * w[j]
+    return out
+
+
+def causal_conv1d_step(
+    x: jnp.ndarray, w: jnp.ndarray, buf: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode step: x [B, C], buf [B, K-1, C] (previous inputs)."""
+    K = w.shape[0]
+    window = jnp.concatenate([buf, x[:, None]], axis=1)      # [B, K, C]
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    return y, window[:, 1:]
+
+
+# -- sLSTM ----------------------------------------------------------------------
+
+
+def init_slstm(key, d: int, num_heads: int) -> Params:
+    kw, kr = jax.random.split(key)
+    dh = d // num_heads
+    return {
+        "w": truncated_normal(kw, (d, 4 * d), d ** -0.5),
+        "r": truncated_normal(kr, (num_heads, dh, 4 * dh), dh ** -0.5),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+    }
+
+
+def slstm_scan(
+    params: Params, x: jnp.ndarray, num_heads: int, state=None
+):
+    """Sequential sLSTM (paper: not parallelizable by design).
+
+    x: [B, L, D] -> y: [B, L, D]; per-head recurrent gates.
+    State: (c, n, h) each [B, H, dh].
+    """
+    B, L, D = x.shape
+    H = num_heads
+    dh = D // H
+    zx = x @ params["w"] + params["b"]                       # [B, L, 4D]
+    zx = zx.reshape(B, L, H, 4 * dh)
+
+    if state is None:
+        z0 = jnp.zeros((B, H, dh), jnp.float32)
+        state = (z0, z0, z0)
+
+    def body(carry, zt):
+        c, n, h = carry
+        rec = jnp.einsum("bhd,hde->bhe", h, params["r"])     # [B,H,4dh]
+        z, i, f, o = jnp.split(zt + rec, 4, axis=-1)
+        z = jnp.tanh(z)
+        i = jax.nn.sigmoid(i)
+        f = jax.nn.sigmoid(f)
+        o = jax.nn.sigmoid(o)
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h), h
+
+    state, hs = jax.lax.scan(body, state, zx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, L, D).astype(x.dtype)
+    return y, state
+
+
+def slstm_step(params: Params, x: jnp.ndarray, num_heads: int, state):
+    """x: [B, D] single step."""
+    y, st = slstm_scan(params, x[:, None], num_heads, state)
+    return y[:, 0], st

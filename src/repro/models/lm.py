@@ -1,0 +1,334 @@
+"""The language-model stack: heterogeneous layer patterns under lax.scan.
+
+Parameters live in a plain pytree:
+
+    params = {
+      "embed":   embedding table (+ optional unembed),
+      "meta":    learned meta tokens [M, D] (hymba), optional,
+      "prefix":  tuple of per-layer params for cfg.prefix_pattern (unrolled),
+      "blocks":  {f"{j}:{kind}": stacked [n_superblocks, ...] leaves},
+      "final_norm": RMSNorm,
+    }
+
+Superblocks are scanned (`lax.scan`), so the compiled program contains one
+superblock body regardless of depth; remat wraps the scan body.  The same
+scan drives decode, carrying the per-superblock cache slices as scan
+xs/ys.  Cross-entropy is evaluated in sequence chunks so the [B, S, V]
+logit tensor is never materialised (V up to 262k here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as blk
+from repro.models.layers import (
+    embed, init_embedding, init_rmsnorm, rmsnorm, truncated_normal, unembed,
+)
+from repro.parallel.axes import constrain
+
+
+def _block_keys(cfg: ArchConfig):
+    return [f"{j}:{kind}" for j, kind in enumerate(cfg.pattern)]
+
+
+def _cast_params(params, dtype):
+    """Matmul weights -> compute dtype; 1D scales/biases stay f32 (the
+    optimizer keeps the f32 master copy; the cast lives inside the jitted
+    step so grads flow back to f32)."""
+    if dtype is None:
+        return params
+    return jax.tree_util.tree_map(
+        lambda p: p.astype(dtype)
+        if (p.dtype == jnp.float32 and p.ndim >= 2)
+        else p,
+        params,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ArchConfig
+    remat: str = "full"          # none | full
+    chunk_q: int = 512           # attention query chunk
+    loss_chunk: int = 512        # CE vocab-chunking along sequence
+    zloss: float = 0.0
+    compute_dtype: Optional[object] = jnp.bfloat16  # None => keep f32
+    attn_seq_shard: bool = False  # sequence-parallel attention (plan 'seq')
+    seq_parallel: bool = True     # Megatron-SP residual stream: the scan
+    # carry [B, S, D] (the dominant train-memory term: one per layer) is
+    # sharded along S over 'model'; GSPMD inserts the AG/RS pairs at the
+    # matmul boundaries (same bytes as the TP psums they replace).
+
+    # -- init -------------------------------------------------------------
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        k_emb, k_meta, k_pre, k_blk = jax.random.split(key, 4)
+        params: Dict = {
+            "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, cfg.tie_embeddings),
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+        if cfg.meta_tokens:
+            params["meta"] = truncated_normal(
+                k_meta, (cfg.meta_tokens, cfg.d_model), 0.02
+            )
+        if cfg.prefix_pattern:
+            pre_keys = jax.random.split(k_pre, len(cfg.prefix_pattern))
+            params["prefix"] = tuple(
+                blk.init_block(k, cfg, kind)
+                for k, kind in zip(pre_keys, cfg.prefix_pattern)
+            )
+        n_sb = cfg.n_superblocks
+        sb_keys = jax.random.split(k_blk, len(cfg.pattern))
+        blocks = {}
+        for j, kind in enumerate(cfg.pattern):
+            keys = jax.random.split(sb_keys[j], n_sb)
+            blocks[f"{j}:{kind}"] = jax.vmap(
+                lambda k, kind=kind: blk.init_block(k, self.cfg, kind)
+            )(keys)
+        params["blocks"] = blocks
+        return params
+
+    def abstract_params(self, seed: int = 0):
+        """Allocation-free parameter specs (for the dry-run)."""
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(seed)))
+
+    # -- embedding frontend --------------------------------------------------
+
+    def _embed_inputs(
+        self,
+        params: Dict,
+        tokens: jnp.ndarray,                       # [B, S_tok]
+        prefix_embeds: Optional[jnp.ndarray],      # [B, P, D] modality stub
+    ) -> Tuple[jnp.ndarray, int]:
+        cfg = self.cfg
+        h = embed(params["embed"], tokens, cfg.scale_embed, cfg.d_model)
+        n_prefix = 0
+        if prefix_embeds is not None:
+            h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+            n_prefix += prefix_embeds.shape[1]
+        if cfg.meta_tokens:
+            B = tokens.shape[0]
+            meta = jnp.broadcast_to(
+                params["meta"][None], (B, cfg.meta_tokens, cfg.d_model)
+            ).astype(h.dtype)
+            h = jnp.concatenate([meta, h], axis=1)
+            n_prefix += cfg.meta_tokens
+        return h, n_prefix
+
+    # -- full-sequence forward -------------------------------------------------
+
+    def forward(
+        self,
+        params: Dict,
+        tokens: jnp.ndarray,
+        prefix_embeds: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+        """Returns (hidden [B, S_total, D], aux_loss, n_prefix)."""
+        cfg = self.cfg
+        params = _cast_params(params, self.compute_dtype)
+        h, n_prefix = self._embed_inputs(params, tokens, prefix_embeds)
+        h = constrain(h, "batch", None, None)
+        aux = jnp.zeros((), jnp.float32)
+
+        prefix_len = n_prefix if cfg.modality == "vision_stub" else 0
+
+        for p, kind in zip(params.get("prefix", ()), cfg.prefix_pattern):
+            h, a = blk.block_train(
+                p, cfg, kind, h, prefix_len, self.chunk_q, self.attn_seq_shard
+            )
+            aux = aux + a
+
+        def one_block(hh, p, kind):
+            hh, a = blk.block_train(
+                p, cfg, kind, hh, prefix_len, self.chunk_q, self.attn_seq_shard
+            )
+            if self.seq_parallel:
+                hh = constrain(hh, "batch", "model", None)
+            return hh, a
+
+        if self.remat == "full" and len(cfg.pattern) > 1:
+            # per-layer remat inside the superblock: without it, backward
+            # keeps a whole 6/8/16-layer body's residuals live at once
+            # (hymba: 164 GiB/device measured; see EXPERIMENTS.md §Perf)
+            one_block = jax.checkpoint(
+                one_block, prevent_cse=False, static_argnums=(2,)
+            )
+
+        def sb_body(carry, sb_params):
+            hh, ax = carry
+            if self.seq_parallel:
+                hh = constrain(hh, "batch", "model", None)
+            for key, kind in zip(_block_keys(cfg), cfg.pattern):
+                hh, a = one_block(hh, sb_params[key], kind)
+                ax = ax + a
+            return (hh, ax), None
+
+        body = sb_body
+        if self.remat == "full":
+            body = jax.checkpoint(sb_body, prevent_cse=False)
+        (h, aux), _ = jax.lax.scan(body, (h, aux), params["blocks"])
+        h = constrain(h, "batch", None, None)
+        h = rmsnorm(params["final_norm"], h)
+        return h, aux, n_prefix
+
+    # -- training loss -----------------------------------------------------------
+
+    def loss(
+        self,
+        params: Dict,
+        tokens: jnp.ndarray,                      # [B, S_tok]
+        prefix_embeds: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """Next-token CE over the token region (prefix/meta positions skipped)."""
+        cfg = self.cfg
+        h, aux, n_prefix = self.forward(params, tokens, prefix_embeds)
+        h_tok = h[:, n_prefix:]                    # align with `tokens`
+        B, S, D = h_tok.shape
+        h_in = h_tok[:, :-1]
+        labels = tokens[:, 1:]
+
+        c = min(self.loss_chunk, S - 1)
+        n_full = (S - 1) // c
+        tail = (S - 1) - n_full * c
+
+        def ce_chunk(hc, lc):
+            logits = unembed(params["embed"], hc)           # f32 [B, c, V]
+            # keep the vocab shard: without this constraint GSPMD may
+            # all-gather the [B, c, V] logits (tens of GB at 256k vocab)
+            logits = constrain(logits, "batch", None, "model")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            # one-hot pick (partial-sum friendly on the sharded vocab dim)
+            vocab_iota = jnp.arange(logits.shape[-1], dtype=lc.dtype)
+            onehot = (lc[..., None] == vocab_iota).astype(logits.dtype)
+            gold = (logits * onehot).sum(axis=-1)
+            ce = (lse - gold).sum()
+            zl = (lse ** 2).sum() * self.zloss
+            return ce + zl
+
+        total = jnp.zeros((), jnp.float32)
+        if n_full:
+            hc = h_in[:, : n_full * c].reshape(B, n_full, c, D).swapaxes(0, 1)
+            lc = labels[:, : n_full * c].reshape(B, n_full, c).swapaxes(0, 1)
+
+            def body(acc, inp):
+                return acc + ce_chunk(*inp), None
+
+            # remat: recompute the [B, c, V] logits in backward instead of
+            # saving them per chunk (V up to 262k => ~0.5 GB/chunk/device)
+            body = jax.checkpoint(body, prevent_cse=False)
+            total, _ = jax.lax.scan(body, total, (hc, lc))
+        if tail:
+            total = total + ce_chunk(h_in[:, n_full * c :], labels[:, n_full * c :])
+
+        n_tokens = B * (S - 1)
+        loss = total / n_tokens + aux
+        return loss, {"ce": total / n_tokens, "aux": aux}
+
+    # -- serving -----------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq: int) -> Dict:
+        cfg = self.cfg
+        cache: Dict = {}
+        if cfg.prefix_pattern:
+            cache["prefix"] = tuple(
+                blk.init_block_cache(cfg, kind, batch, seq)
+                for kind in cfg.prefix_pattern
+            )
+        n_sb = cfg.n_superblocks
+        cache["blocks"] = {
+            key: jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l[None], (n_sb, *l.shape)).copy(),
+                blk.init_block_cache(cfg, kind, batch, seq),
+            )
+            for key, kind in zip(_block_keys(cfg), cfg.pattern)
+        }
+        return cache
+
+    def abstract_cache(self, batch: int, seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, seq))
+
+    def prefill(
+        self,
+        params: Dict,
+        tokens: jnp.ndarray,
+        cache_len: int,
+        prefix_embeds: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, Dict, jnp.ndarray]:
+        """Run the prompt, build the cache.  Returns (last-token logits,
+        cache, lengths)."""
+        cfg = self.cfg
+        params = _cast_params(params, self.compute_dtype)
+        h, n_prefix = self._embed_inputs(params, tokens, prefix_embeds)
+        prefix_len = n_prefix if cfg.modality == "vision_stub" else 0
+        B, S, _ = h.shape
+        cache: Dict = {}
+
+        if cfg.prefix_pattern:
+            pcs = []
+            for p, kind in zip(params["prefix"], cfg.prefix_pattern):
+                h, c = blk.block_prefill(
+                    p, cfg, kind, h, cache_len, prefix_len, self.chunk_q,
+                    self.attn_seq_shard,
+                )
+                pcs.append(c)
+            cache["prefix"] = tuple(pcs)
+
+        def sb_body(hh, sb_params):
+            cs = {}
+            for key, kind in zip(_block_keys(cfg), cfg.pattern):
+                hh, c = blk.block_prefill(
+                    sb_params[key], cfg, kind, hh, cache_len, prefix_len,
+                    self.chunk_q, self.attn_seq_shard,
+                )
+                cs[key] = c
+            return hh, cs
+
+        h, cache["blocks"] = jax.lax.scan(sb_body, h, params["blocks"])
+        h = rmsnorm(params["final_norm"], h[:, -1:])
+        logits = unembed(params["embed"], h).astype(jnp.float32)
+        lengths = jnp.full((B,), S, jnp.int32)
+        return logits[:, 0], cache, lengths
+
+    def decode_step(
+        self,
+        params: Dict,
+        tokens: jnp.ndarray,       # [B, 1]
+        cache: Dict,
+        lengths: jnp.ndarray,      # [B] (position of the incoming token)
+    ) -> Tuple[jnp.ndarray, Dict, jnp.ndarray]:
+        cfg = self.cfg
+        params = _cast_params(params, self.compute_dtype)
+        h = embed(params["embed"], tokens, cfg.scale_embed, cfg.d_model)
+        new_cache: Dict = {}
+
+        if cfg.prefix_pattern:
+            pcs = []
+            for p, kind, c in zip(
+                params["prefix"], cfg.prefix_pattern, cache["prefix"]
+            ):
+                h, c2 = blk.block_decode(p, cfg, kind, h, c, lengths)
+                pcs.append(c2)
+            new_cache["prefix"] = tuple(pcs)
+
+        def sb_body(hh, xs):
+            sb_params, sb_cache = xs
+            cs = {}
+            for key, kind in zip(_block_keys(cfg), cfg.pattern):
+                hh, c2 = blk.block_decode(sb_params[key], cfg, kind, hh, sb_cache[key], lengths)
+                cs[key] = c2
+            return hh, cs
+
+        h, new_cache["blocks"] = jax.lax.scan(
+            sb_body, h, (params["blocks"], cache["blocks"])
+        )
+        h = rmsnorm(params["final_norm"], h)
+        logits = unembed(params["embed"], h).astype(jnp.float32)
+        return logits[:, 0], new_cache, lengths + 1

@@ -1,0 +1,9 @@
+from repro.optim.adamw import (
+    AdamWConfig, adamw_update, global_norm, init_opt_state, schedule_lr,
+)
+from repro.optim.grad_compression import compress, decompress, init_error_state
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "global_norm", "init_opt_state",
+    "schedule_lr", "compress", "decompress", "init_error_state",
+]

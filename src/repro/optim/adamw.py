@@ -1,0 +1,116 @@
+"""AdamW with global-norm clipping and decay masking, as a plain pytree
+transform (no optax dependency -- the container is offline).
+
+State layout mirrors the param tree: ``{"m": tree, "v": tree, "count": i32}``.
+Under the ZeRO-1 sharding plan the m/v trees carry an extra 'data'-axis
+sharding on top of the parameter TP sharding (see parallel/sharding.py);
+this module is sharding-agnostic -- GSPMD inserts the reduce-scatter /
+all-gather around the update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"        # constant | cosine
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def _decay_mask(path: Tuple, leaf) -> bool:
+    """Weight decay on matrices only (no norms/biases/gates/embedding-scale)."""
+    names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    if any(str(n).startswith(("ln", "norm", "final_norm", "b_", "scale")) for n in names):
+        return False
+    return getattr(leaf, "ndim", 0) >= 2
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {
+        "m": zeros,
+        "v": jax.tree_util.tree_map(jnp.copy, zeros),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    params,
+    grads,
+    state: Dict[str, Any],
+) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One optimizer step.  Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule_lr(cfg, count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        gf = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1 - cfg.b1) * gf
+        v2 = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        upd = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path, p):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(m2)
+        new_v.append(v2)
+
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    state2 = {
+        "m": jax.tree_util.tree_unflatten(_treedef(state["m"]), new_m),
+        "v": jax.tree_util.tree_unflatten(_treedef(state["v"]), new_v),
+        "count": count,
+    }
+    return params2, state2, {"lr": lr, "grad_norm": gnorm, "clip_scale": scale}
+
+
+def _treedef(tree):
+    return jax.tree_util.tree_structure(tree)

@@ -1,0 +1,54 @@
+"""Error-feedback int8 gradient compression for the data-parallel axis.
+
+Distributed-optimization trick for 1000+-node scale: before the DP
+all-reduce, gradients are quantised to int8 with a per-tensor scale; the
+quantisation error is kept locally and added back into the next step's
+gradient (error feedback), which keeps SGD/Adam convergence intact in
+expectation.  Under pjit the quantised tree is what crosses the 'data'
+axis, cutting DP collective bytes 4x (f32) / 2x (bf16).
+
+The transform is pure-pytree so it composes with any optimizer:
+
+    comp, new_err = compress(grads, err)      # int8 tree + carried error
+    grads2        = decompress(comp)          # dequantised, post-allreduce
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params
+    )
+
+
+def _quantise(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress(grads, err_state) -> Tuple[Dict[str, Any], Any]:
+    """Returns ({'q': int8 tree, 'scale': f32 tree}, new_error_tree)."""
+    gs = jax.tree_util.tree_map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, err_state
+    )
+    qs = jax.tree_util.tree_map(_quantise, gs)
+    q = jax.tree_util.tree_map(lambda t: t[0], qs, is_leaf=lambda t: isinstance(t, tuple))
+    scale = jax.tree_util.tree_map(lambda t: t[1], qs, is_leaf=lambda t: isinstance(t, tuple))
+    deq = jax.tree_util.tree_map(
+        lambda qq, ss: qq.astype(jnp.float32) * ss, q, scale
+    )
+    new_err = jax.tree_util.tree_map(lambda g, d: g - d, gs, deq)
+    return {"q": q, "scale": scale}, new_err
+
+
+def decompress(comp: Dict[str, Any]):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, comp["q"], comp["scale"]
+    )

@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (
+    ShardingPlan, choose_attn_mode, data_axes, make_plan, model_size,
+)
+
+__all__ = [
+    "ShardingPlan", "choose_attn_mode", "data_axes", "make_plan", "model_size",
+]

@@ -1,0 +1,291 @@
+"""Per-architecture sharding plans over the production mesh.
+
+Mesh axes: ``("data", "model")`` single-pod (16 x 16) or
+``("pod", "data", "model")`` multi-pod (2 x 16 x 16).  Roles:
+
+  batch        -> ("pod", "data")   pure DP across pods + within pod
+  tensor/TP    -> "model"           heads, mlp hidden, vocab, experts (EP)
+  KV seq (serve) -> "model"         long caches sequence-sharded
+  ZeRO-1       -> optimizer moments additionally sharded over "data"
+
+Attention TP picks per arch (divisibility against |model| = 16):
+  * head-sharding (Megatron) when q AND kv head counts divide,
+  * head_dim-sharding (contraction TP, psum per attention) otherwise,
+  * replicate as last resort.
+
+The plan is computed from the *abstract* parameter tree (path + shape
+rules), so it drives both the dry-run lowering and real training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+MODEL_AXIS = "model"
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape[MODEL_AXIS]
+
+
+def _div(n: int, m: int) -> bool:
+    return n % m == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    cfg: ArchConfig
+    mesh: Mesh
+    attn_mode: str           # heads | qheads | seq | head_dim | replicate
+    zero1: bool = True
+    fsdp: bool = True        # shard otherwise-replicated big weights over
+    #                          'data' (ZeRO-3-lite: AG at use, RS on grads)
+    fsdp_min_size: int = 65536
+
+    # -- parameter specs ----------------------------------------------------
+
+    def _rule(self, pathstr: str, shape: Tuple[int, ...]) -> P:
+        m = model_size(self.mesh)
+        cfg = self.cfg
+
+        def mdl(n: int):
+            return MODEL_AXIS if _div(n, m) else None
+
+        # embeddings -----------------------------------------------------
+        if pathstr.endswith("embed/table"):
+            return P(mdl(shape[0]), None)
+        if pathstr.endswith("embed/unembed"):
+            return P(None, mdl(shape[1]))
+        if pathstr.endswith("meta"):
+            return P(None, None)
+
+        # attention (3D/4D weights) ---------------------------------------
+        if "/attn/" in pathstr:
+            name = pathstr.rsplit("/", 1)[-1]
+            if self.attn_mode == "heads":
+                if name == "wq":   # [D, G, Hg, hd]
+                    return P(None, MODEL_AXIS, None, None)
+                if name in ("wk", "wv"):  # [D, G, hd]
+                    return P(None, MODEL_AXIS, None)
+                if name == "wo":   # [G, Hg, hd, D]
+                    return P(MODEL_AXIS, None, None, None)
+            if self.attn_mode == "qheads":
+                # Megatron on query heads only; tiny K/V projs replicated
+                if name == "wq":
+                    return P(None, None, MODEL_AXIS, None)
+                if name == "wo":
+                    return P(None, MODEL_AXIS, None, None)
+                return P(*([None] * len(shape)))
+            if self.attn_mode == "head_dim":
+                if name == "wq":
+                    return P(None, None, None, MODEL_AXIS)
+                if name in ("wk", "wv"):
+                    return P(None, None, MODEL_AXIS)
+                if name == "wo":
+                    return P(None, None, MODEL_AXIS, None)
+            # 'seq' / 'replicate': weights replicated (seq mode parallelises
+            # over the sequence via activation constraints instead)
+            return P(*([None] * len(shape)))
+
+        # MoE ---------------------------------------------------------------
+        if "/moe/" in pathstr and "/shared/" not in pathstr:
+            name = pathstr.rsplit("/", 1)[-1]
+            E = cfg.moe.num_experts
+            if name == "router":
+                return P(None, None)
+            if name in ("w_gate", "w_up") and len(shape) == 3:  # [E, D, F]
+                return P(mdl(E), None, None if _div(E, m) else mdl(shape[2]))
+            if name == "w_down" and len(shape) == 3:            # [E, F, D]
+                return P(mdl(E), None if _div(E, m) else mdl(shape[1]), None)
+        # shared-expert MLP falls through to the dense mlp rules below
+
+        # dense MLP (also shared experts) -----------------------------------
+        name = pathstr.rsplit("/", 1)[-1]
+        if name in ("w_gate", "w_up") and len(shape) == 2:  # [D, F]
+            return P(None, mdl(shape[1]))
+        if name == "w_down" and len(shape) == 2:            # [F, D]
+            return P(mdl(shape[0]), None)
+
+        # xLSTM / hymba recurrent mixers: column-TP fights the head-grouped
+        # reshapes (GSPMD shards the chunk-scan axis -> per-step involuntary
+        # full remat, measured 310 TB/device HBM traffic on xlstm train_4k;
+        # §Perf).  Replicate over 'model' (FSDP fallback shards over 'data');
+        # the model axis is reused as extra batch parallelism inside the
+        # mixers (axes.constrain_time_mixer).
+        if ":mlstm/" in pathstr or ":slstm/" in pathstr:
+            return P(*([None] * len(shape)))
+        if name in ("ssm_in", "ssm_out"):
+            return P(None, None)
+
+        return P(*([None] * len(shape)))
+
+    def _fsdp_fallback(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Large fully-replicated weights -> shard one dim over 'data'."""
+        if not self.fsdp or any(a is not None for a in spec):
+            return spec
+        if int(np.prod(shape)) < self.fsdp_min_size or len(shape) < 2:
+            return spec
+        dsize = _dtotal(self.mesh)
+        daxes = data_axes(self.mesh)
+        parts = list(spec)
+        for i, dim in enumerate(shape):
+            if _div(dim, dsize):
+                parts[i] = daxes if len(daxes) > 1 else daxes[0]
+                return P(*parts)
+        return spec
+
+    def param_specs(self, abstract_params):
+        def spec(path, leaf):
+            pathstr = "/".join(
+                str(getattr(p, "key", getattr(p, "name", p))) for p in path
+            )
+            shape = leaf.shape
+            if "blocks/" in pathstr:  # scan-stacked: leading n_superblocks dim
+                body = shape[1:]
+                inner = self._fsdp_fallback(self._rule(pathstr, body), body)
+                return P(None, *inner)
+            return self._fsdp_fallback(self._rule(pathstr, shape), shape)
+
+        return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+    def param_shardings(self, abstract_params):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s),
+            self.param_specs(abstract_params),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    # -- optimizer (ZeRO-1): moments get an extra 'data' dim where free ------
+
+    def opt_specs(self, abstract_params):
+        pspecs = self.param_specs(abstract_params)
+        dsize = int(np.prod([self.mesh.shape[a] for a in data_axes(self.mesh)]))
+        daxes = data_axes(self.mesh)
+
+        def zero1(path, leaf, ps):
+            if not self.zero1:
+                return ps
+            parts = list(ps) + [None] * (len(leaf.shape) - len(ps))
+            # 'data' may appear at most once in a spec (FSDP may have used it)
+            used = set()
+            for a in parts:
+                for ax in (a if isinstance(a, tuple) else (a,)):
+                    if ax is not None:
+                        used.add(ax)
+            if set(daxes) & used:
+                return P(*parts)
+            for i, (dim, cur) in enumerate(zip(leaf.shape, parts)):
+                if cur is None and _div(dim, dsize) and dim >= dsize:
+                    parts[i] = daxes if len(daxes) > 1 else daxes[0]
+                    break
+            return P(*parts)
+
+        moment = jax.tree_util.tree_map(
+            lambda l, ps: zero1((), l, ps), abstract_params, pspecs
+        )
+        return {"m": moment, "v": moment, "count": P()}
+
+    # -- activations / inputs -------------------------------------------------
+
+    def batch_spec(self, ndim: int) -> P:
+        da = data_axes(self.mesh)
+        lead = da if len(da) > 1 else da[0]
+        return P(lead, *([None] * (ndim - 1)))
+
+    def token_sharding(self):
+        return NamedSharding(self.mesh, self.batch_spec(2))
+
+    # -- decode cache ----------------------------------------------------------
+
+    def cache_specs(self, abstract_cache, seq_shard_min: int = 8192):
+        """KV caches: batch -> data, long sequence dims -> model;
+        GLA/SSM states: batch -> data, state dv -> model where divisible."""
+        m = model_size(self.mesh)
+        da = data_axes(self.mesh)
+        lead = da if len(da) > 1 else da[0]
+
+        def spec(path, leaf):
+            pathstr = "/".join(
+                str(getattr(p, "key", getattr(p, "name", p))) for p in path
+            )
+            shape = leaf.shape
+            stacked = "blocks/" in pathstr
+            body = shape[1:] if stacked else shape
+            name = pathstr.rsplit("/", 1)[-1]
+            if name in ("k", "v"):        # [B, S, G, hd]
+                B, S = body[0], body[1]
+                bspec = lead if B % _dtotal(self.mesh) == 0 else None
+                sspec = MODEL_AXIS if (S >= seq_shard_min and _div(S, m)) else None
+                inner = P(bspec, sspec, None, None)
+            elif name == "S":             # [B, H, dk, dv]
+                B = body[0]
+                bspec = lead if B % _dtotal(self.mesh) == 0 else None
+                dv = body[-1]
+                inner = P(bspec, None, None, MODEL_AXIS if _div(dv, m) else None)
+            elif name in ("n", "c", "h"):  # [B, H, d]
+                B = body[0]
+                bspec = lead if B % _dtotal(self.mesh) == 0 else None
+                inner = P(bspec, None, None)
+            elif name == "conv":          # [B, K-1, inner]
+                B = body[0]
+                bspec = lead if B % _dtotal(self.mesh) == 0 else None
+                inner = P(bspec, None, None)
+            else:
+                inner = P(*([None] * len(body)))
+            return P(None, *inner) if stacked else inner
+
+        return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+    def cache_shardings(self, abstract_cache):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s),
+            self.cache_specs(abstract_cache),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+
+def _dtotal(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+
+
+def choose_attn_mode(cfg: ArchConfig, mesh: Mesh, kind: str = "train") -> str:
+    """Per-arch attention TP selection (measured trade-offs in
+    EXPERIMENTS.md §Perf):
+
+    * heads     KV-head Megatron TP -- only when q AND kv heads divide;
+    * qheads    query-head Megatron TP, K/V projections replicated --
+                when queries-per-group divides (e.g. glm4 Hg=16);
+    * seq       sequence-parallel attention (replicated weights, queries
+                sharded along S) -- train/prefill fallback; avoids both
+                the 16x replicated compute of 'replicate' and the
+                [Sq,Sk]-score all-reduce of 'head_dim' (544 GB/device on
+                gemma-2b train_4k);
+    * head_dim  contraction TP -- decode only (scores are [.., 1, S]);
+    * replicate last resort.
+    """
+    m = model_size(mesh)
+    if _div(cfg.num_heads, m) and _div(cfg.num_kv_heads, m):
+        return "heads"
+    if _div(cfg.num_heads // cfg.num_kv_heads, m):
+        return "qheads"
+    if kind == "decode":
+        return "head_dim" if _div(cfg.head_dim, m) else "replicate"
+    return "seq"
+
+
+def make_plan(cfg: ArchConfig, mesh: Mesh, zero1: bool = True,
+              attn_mode: Optional[str] = None, kind: str = "train") -> ShardingPlan:
+    return ShardingPlan(
+        cfg, mesh, attn_mode or choose_attn_mode(cfg, mesh, kind), zero1=zero1
+    )

@@ -1,0 +1,9 @@
+from repro.roofline.model import (
+    HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport, collective_bytes,
+    format_roofline_rows, model_flops_estimate, shape_bytes,
+)
+
+__all__ = [
+    "HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineReport", "collective_bytes",
+    "format_roofline_rows", "model_flops_estimate", "shape_bytes",
+]

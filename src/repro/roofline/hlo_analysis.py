@@ -1,0 +1,222 @@
+"""Trip-count-aware HLO cost census.
+
+XLA's ``compiled.cost_analysis()`` counts ``while`` bodies ONCE -- for a
+scan-over-layers program that undercounts FLOPs/bytes/collectives by a
+factor of ~num_layers (verified empirically; see EXPERIMENTS.md §Dry-run
+notes).  This module re-derives the three roofline numerators directly
+from the optimized HLO text, multiplying every instruction by the product
+of the ``known_trip_count`` of the while loops enclosing it:
+
+  * flops            2 * |out| * |contracted|, for every dot (fusion
+                     bodies included);
+  * hbm bytes        sum of (result + operand) bytes per *top-level*
+                     instruction of sequential computations -- fusions
+                     count as one instruction (params + result), matching
+                     the fused-HBM-traffic model;
+  * collective bytes result bytes of all-gather/all-reduce/reduce-scatter/
+                     all-to-all/collective-permute ops.
+
+The text is the per-device SPMD module, so all numbers are per device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.roofline.model import _COLLECTIVES, shape_bytes
+
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w\.\-_]+)\s*=\s*((?:\([^)]*\)|[a-z0-9_]+\[[^\]]*\]\S*|\S+))\s+([a-z][a-z0-9\-_]*)\((.*)$"
+)
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_ATTR_COMP = re.compile(r"(?:body|condition|calls|to_apply)=%?([\w\.\-_]+)")
+_OPERAND = re.compile(r"%([\w\.\-_]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DIMS = re.compile(r"\[([\d,]*)\]")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "iota", "partition-id",
+    "replica-id",
+    # layout-free on TPU (folded into neighbouring fusions); CPU HLO keeps
+    # them standalone, which would inflate the HBM term ~2-3x:
+    "reshape", "broadcast", "copy-start", "copy-done",
+}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    kind: str
+    result: str          # result type string
+    operands: List[str]
+    rest: str            # everything after '(' (operand list + attrs)
+    trip: int = 1        # while only
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr]
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Dict[str, str], str]:
+    comps: Dict[str, Computation] = {}
+    shapes: Dict[str, str] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        m = _COMP_START.match(line)
+        if m:
+            name = m.group(2)
+            cur = Computation(name, bool(m.group(1)), [])
+            comps[name] = cur
+            if m.group(1):
+                entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_LINE.match(line)
+        if not mo:
+            continue
+        _, name, result, kind, rest = mo.groups()
+        # operand names: inside the first paren group, before attrs
+        operands = _OPERAND.findall(rest.split("),", 1)[0])
+        inst = Instr(name, kind, result, operands, rest)
+        if kind == "while":
+            t = _TRIP.search(line)
+            inst.trip = int(t.group(1)) if t else 1
+        cur.instrs.append(inst)
+        shapes[name] = result
+    return comps, shapes, entry
+
+
+def _called(inst: Instr) -> List[str]:
+    return _ATTR_COMP.findall(inst.rest)
+
+
+def _dot_flops(inst: Instr, shapes: Dict[str, str]) -> float:
+    out_elems = 1
+    md = _DIMS.search(inst.result)
+    if md and md.group(1):
+        for d in md.group(1).split(","):
+            out_elems *= int(d)
+    lhs = shapes.get(inst.operands[0], "") if inst.operands else ""
+    mc = _CONTRACT.search(inst.rest)
+    contracted = 1
+    if mc and lhs:
+        ml = _DIMS.search(lhs)
+        if ml and ml.group(1):
+            dims = [int(d) for d in ml.group(1).split(",")]
+            for idx in (mc.group(1) or "").split(","):
+                if idx != "" and int(idx) < len(dims):
+                    contracted *= dims[int(idx)]
+    return 2.0 * out_elems * contracted
+
+
+RESIDENT_RATIO = 64  # operand >64x result => slice-like / loop-resident
+
+
+def _instr_bytes(inst: Instr, shapes: Dict[str, str], trip: int = 1) -> float:
+    """Result + operand bytes; inside a while body (trip > 1), an operand
+    vastly larger than the result is either a dynamic-slice view of a
+    loop-wide buffer (scan xs: the buffer is read ~once per loop
+    execution, not once per step) or a loop-resident weight (VMEM on TPU)
+    -- both are charged once per loop execution, i.e. bytes/trip."""
+    rb = shape_bytes(inst.result)
+    total = float(rb)
+    for op in inst.operands:
+        if op not in shapes:
+            continue
+        ob = shape_bytes(shapes[op])
+        if trip > 1 and ob > RESIDENT_RATIO * max(rb, 1):
+            total += ob / trip
+        else:
+            total += ob
+    return total
+
+
+@dataclasses.dataclass
+class HloCensus:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    coll_breakdown: Dict[str, float]
+    while_trips: Dict[str, int]
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(text: str) -> HloCensus:
+    comps, shapes, entry = parse_module(text)
+    if entry not in comps:
+        return HloCensus(0.0, 0.0, 0.0, {}, {})
+
+    # Propagate multipliers through the call graph.
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    fused: Set[str] = set()
+    trips: Dict[str, int] = {}
+    comp_trip: Dict[str, int] = {}   # immediate enclosing-loop trip count
+
+    stack = [(entry, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] += m
+        comp = comps[name]
+        for inst in comp.instrs:
+            if inst.kind == "while":
+                trips[inst.name] = inst.trip
+                for callee in _called(inst):
+                    comp_trip[callee] = max(comp_trip.get(callee, 1), inst.trip)
+                    stack.append((callee, m * inst.trip))
+            elif inst.kind == "fusion":
+                for callee in _called(inst):
+                    fused.add(callee)
+                    stack.append((callee, m))
+            elif inst.kind in ("conditional", "call", "custom-call", "sort",
+                               "reduce", "map", "scatter", "select-and-scatter",
+                               "reduce-window", "all-reduce"):
+                # to_apply bodies are tiny scalar computations: propagate for
+                # flops completeness, but they contain no dots in practice.
+                for callee in _called(inst):
+                    fused.add(callee)
+                    stack.append((callee, m))
+
+    flops = 0.0
+    hbm = 0.0
+    coll = {c: 0.0 for c in _COLLECTIVES}
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        sequential = name == entry or name not in fused
+        for inst in comp.instrs:
+            kind = inst.kind
+            if kind in ("dot", "convolution"):
+                flops += m * _dot_flops(inst, shapes)
+            ckind = None
+            for c in _COLLECTIVES:
+                if kind == c or kind == c + "-start":
+                    ckind = c
+            if ckind and sequential:
+                coll[ckind] += m * shape_bytes(inst.result)
+            if sequential and kind not in SKIP_BYTES_OPS and not kind.endswith("-done"):
+                hbm += m * _instr_bytes(inst, shapes, comp_trip.get(name, 1))
+    total_coll = sum(coll.values())
+    return HloCensus(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=total_coll,
+        coll_breakdown={**coll, "total": total_coll},
+        while_trips=trips,
+    )

@@ -1,0 +1,178 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh), all in seconds per step:
+
+    compute    = HLO_FLOPs / (chips * 197e12)         [bf16 MXU peak]
+    memory     = HLO_bytes / (chips * 819e9)          [HBM bandwidth]
+    collective = collective_bytes / (chips * 50e9)    [per-link ICI]
+
+``compiled.cost_analysis()`` gives per-device FLOPs / bytes (the SPMD
+module is per-device; multiply by chips to get the global numbers the
+formulas divide back down).  Collective bytes are NOT in cost_analysis:
+we parse the optimized HLO text and sum output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(per-device bytes crossing the links).
+
+MODEL_FLOPS = 6 * N_active * tokens (the classic transformer estimate);
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat recompute and dispatch
+overhead (for MoE, top-k + shared experts count as active).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, Iterable, Optional
+
+# -- hardware constants (TPU v5e) ---------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g. "  %ag = bf16[16,1408]{1,0} all-gather(...)" or tuple outputs
+_OP_LINE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s]*\)?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\("
+)
+_SHAPE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-type output bytes (per device) from optimized HLO.
+
+    ``-start``-suffixed async forms are counted; their ``-done`` halves are
+    not (same buffer).
+    """
+    out = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue
+        out[m.group(2)] += shape_bytes(m.group(1))
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float                  # global, 6*N_active*tokens
+    peak_memory_per_device: Optional[float] = None
+    coll_breakdown: Optional[Dict[str, int]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time: max of the three overlappable engines."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops / hlo_global if hlo_global else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilisation at the roofline step time."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_at_roofline": self.mfu,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def model_flops_estimate(cfg, shape, n_active: float) -> float:
+    """6*N*D for train (fwd+bwd), 2*N*D for inference shapes."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def format_roofline_rows(reports: Iterable[RooflineReport]) -> str:
+    rows = [r.to_dict() for r in reports]
+    if not rows:
+        return "(empty)"
+    cols = [
+        "arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+        "t_collective_s", "bottleneck", "useful_flops_ratio", "mfu_at_roofline",
+    ]
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.3e}" if (abs(v) < 1e-2 and v) else f"{v:.3f}"
+        return str(v)
+    widths = {c: max(len(c), *(len(fmt(r[c])) for r in rows)) for c in cols}
+    head = " | ".join(c.ljust(widths[c]) for c in cols)
+    sep = "-+-".join("-" * widths[c] for c in cols)
+    body = "\n".join(
+        " | ".join(fmt(r[c]).ljust(widths[c]) for c in cols) for r in rows
+    )
+    return f"{head}\n{sep}\n{body}"

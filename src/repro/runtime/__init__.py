@@ -1,0 +1,5 @@
+from repro.runtime.fault_tolerance import (
+    ElasticPlan, HeartbeatMonitor, RunState, resume_or_init,
+)
+
+__all__ = ["ElasticPlan", "HeartbeatMonitor", "RunState", "resume_or_init"]

@@ -1,0 +1,138 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching.
+
+The engine owns a fixed [max_batch, max_seq] cache; requests claim slots,
+prefill fills them, and the decode step advances every active slot each
+tick (inactive slots are masked from sampling).  Greedy or temperature
+sampling; deterministic under a fixed seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int
+    max_seq: int
+    temperature: float = 0.0     # 0 => greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, lm: LM, params, cfg: ServeConfig):
+        self.lm = lm
+        self.params = params
+        self.cfg = cfg
+        self._decode = jax.jit(lm.decode_step)
+        self._prefill = jax.jit(
+            lm.prefill, static_argnames=("cache_len",)
+        )
+
+    # -- one-shot batch generation -------------------------------------------
+
+    def generate(
+        self,
+        prompts: jnp.ndarray,          # [B, S_prompt] int32
+        num_steps: int,
+        prefix_embeds: Optional[jnp.ndarray] = None,
+    ) -> np.ndarray:
+        """Prefill the batch, then decode `num_steps` tokens greedily."""
+        B = prompts.shape[0]
+        assert B <= self.cfg.max_batch
+        logits, cache, lengths = self._prefill(
+            self.params, prompts, cache_len=self.cfg.max_seq,
+            prefix_embeds=prefix_embeds,
+        )
+        out = []
+        key = jax.random.PRNGKey(self.cfg.seed)
+        tok = self._sample(logits, key)
+        out.append(tok)
+        for i in range(num_steps - 1):
+            logits, cache, lengths = self._decode(
+                self.params, tok[:, None], cache, lengths
+            )
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+            out.append(tok)
+        return np.stack([np.asarray(t) for t in out], axis=1)  # [B, steps]
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1
+        ).astype(jnp.int32)
+
+
+class SlotServer:
+    """Continuous-batching skeleton: requests arrive/finish independently;
+    every tick decodes all active slots in one batched step."""
+
+    def __init__(self, lm: LM, params, cfg: ServeConfig):
+        self.lm = lm
+        self.params = params
+        self.cfg = cfg
+        self.cache = lm.init_cache(cfg.max_batch, cfg.max_seq)
+        self.lengths = jnp.zeros((cfg.max_batch,), jnp.int32)
+        self.active = np.zeros((cfg.max_batch,), bool)
+        self.last_token = jnp.zeros((cfg.max_batch,), jnp.int32)
+        self._decode = jax.jit(lm.decode_step)
+        self.outputs: Dict[int, List[int]] = {}
+
+    def add_request(self, slot: int, prompt: np.ndarray) -> None:
+        """Single-slot prefill (production would batch these too)."""
+        assert not self.active[slot]
+        logits, cache1, lengths1 = self.lm.prefill(
+            self.params, jnp.asarray(prompt)[None], cache_len=self.cfg.max_seq
+        )
+        # splice slot-0 of the single-request cache into the shared cache
+        self.cache = jax.tree_util.tree_map(
+            lambda full, one: _splice(full, one, slot), self.cache, cache1
+        )
+        self.lengths = self.lengths.at[slot].set(int(lengths1[0]))
+        self.last_token = self.last_token.at[slot].set(
+            int(jnp.argmax(logits[0]))
+        )
+        self.active[slot] = True
+        self.outputs[slot] = [int(jnp.argmax(logits[0]))]
+
+    def tick(self) -> None:
+        if not self.active.any():
+            return
+        logits, self.cache, new_lengths = self._decode(
+            self.params, self.last_token[:, None], self.cache, self.lengths
+        )
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        mask = jnp.asarray(self.active)
+        self.lengths = jnp.where(mask, new_lengths, self.lengths)
+        self.last_token = jnp.where(mask, tok, self.last_token)
+        for slot in np.nonzero(self.active)[0]:
+            self.outputs[slot].append(int(tok[slot]))
+
+    def finish(self, slot: int) -> List[int]:
+        self.active[slot] = False
+        self.lengths = self.lengths.at[slot].set(0)
+        return self.outputs.pop(slot)
+
+
+def _splice(full: jnp.ndarray, one: jnp.ndarray, slot: int) -> jnp.ndarray:
+    """Write a batch-1 cache leaf into batch slot `slot` of the full cache.
+    Batch is axis 0 for unstacked leaves and axis 1 for scan-stacked ones;
+    identified by matching trailing dims."""
+    if full.shape[1:] == one.shape[1:]:          # [B, ...] leaf
+        return jax.lax.dynamic_update_slice(
+            full, one.astype(full.dtype), (slot,) + (0,) * (full.ndim - 1)
+        )
+    # stacked leaf: [n_sb, B, ...]
+    return jax.lax.dynamic_update_slice(
+        full, one.astype(full.dtype), (0, slot) + (0,) * (full.ndim - 2)
+    )

@@ -1,0 +1,7 @@
+from repro.train.loop import LoopConfig, train_loop
+from repro.train.step import init_train_state, make_train_step, train_step
+
+__all__ = [
+    "LoopConfig", "train_loop", "init_train_state", "make_train_step",
+    "train_step",
+]

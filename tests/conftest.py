@@ -1,0 +1,14 @@
+# NOTE: do NOT set XLA_FLAGS / host-device-count here -- smoke tests and
+# benches must see the single real CPU device; only launch/dryrun.py forces
+# 512 placeholder devices (and does so before any jax import).
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,72 @@
+"""Checkpointer tests: atomicity, async, GC, torn-checkpoint fallback."""
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def _tree(x=1.0):
+    return {
+        "params": {"w": jnp.full((4, 4), x), "b": jnp.full((4,), 2 * x)},
+        "opt": {"m": {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))},
+                "count": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree(3.0)
+    ck.save(10, t)
+    step, t2 = ck.restore_latest(jax.tree_util.tree_map(np.asarray, t))
+    assert step == 10
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1.0), blocking=False)
+    ck.wait()
+    assert ck.committed_steps() == [1]
+
+
+def test_gc_keeps_newest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(float(s)))
+    assert ck.committed_steps() == [3, 4]
+
+
+def test_torn_checkpoint_ignored_and_fallback(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(5.0))
+    ck.save(6, _tree(6.0))
+    # corrupt the newest: truncate arrays file
+    with open(os.path.join(str(tmp_path), "step_6", "arrays.npz"), "wb") as f:
+        f.write(b"garbage")
+    step, t = ck.restore_latest(_tree())
+    assert step == 5
+    assert float(np.asarray(t["params"]["w"]).reshape(-1)[0]) == 5.0
+
+
+def test_tmp_dir_is_not_a_checkpoint(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_9.tmp"))
+    assert ck.committed_steps() == []
+    assert ck.cleanup_tmp() == 1
+    step, t = ck.restore_latest(_tree())
+    assert step is None and t is None
+
+
+def test_restore_mismatched_structure_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    with pytest.raises(ValueError, match="leaves"):
+        ck.restore(1, {"just_one": np.zeros((2,))})

@@ -1,0 +1,76 @@
+"""Fault-tolerance tests: crash-restart, straggler detection, elastic plan."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.runtime import ElasticPlan, HeartbeatMonitor, resume_or_init
+
+
+def _init():
+    return {"params": {"w": jnp.zeros((2, 2))}, "opt": {"count": jnp.asarray(0)}}
+
+
+def test_resume_fresh_run(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    st = resume_or_init(ck, _init)
+    assert st.step == 0 and not st.resumed
+
+
+def test_resume_after_crash(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _init()
+    tree["params"]["w"] = jnp.full((2, 2), 9.0)
+    ck.save(42, tree)
+    # simulate crash mid-write of the next checkpoint
+    import os
+    os.makedirs(str(tmp_path) + "/step_43.tmp")
+    st = resume_or_init(ck, _init)
+    assert st.resumed and st.step == 42
+    assert float(st.tree["params"]["w"][0, 0]) == 9.0
+    # and the torn tmp dir was cleaned
+    assert not os.path.exists(str(tmp_path) + "/step_43.tmp")
+
+
+def test_straggler_detection():
+    mon = HeartbeatMonitor(window=16, factor=3.0)
+    for s in range(10):
+        assert not mon.record(s, 1.0)
+    assert mon.record(10, 10.0)       # 10x the median -> straggler
+    assert mon.stragglers[-1][0] == 10
+    assert not mon.record(11, 1.1)
+
+
+def test_straggler_needs_history():
+    mon = HeartbeatMonitor()
+    assert not mon.record(0, 100.0)   # no baseline yet -> not flagged
+
+
+def test_heartbeat_timer():
+    mon = HeartbeatMonitor()
+    mon.start()
+    dt = mon.stop(0)
+    assert dt >= 0.0
+    assert len(mon.durations) == 1
+
+
+def test_elastic_plan_shrinks_data_axis():
+    ep = ElasticPlan(old_shape=(16, 16), new_devices=192, axis_names=("data", "model"))
+    assert ep.plan() == (12, 16)
+    assert ep.can_restore()
+
+
+def test_elastic_plan_multipod_folds_pods():
+    ep = ElasticPlan(
+        old_shape=(2, 16, 16), new_devices=256 + 128,
+        axis_names=("pod", "data", "model"),
+    )
+    pods, data, model = ep.plan()
+    assert model == 16 and pods * data * model <= 384
+
+
+def test_elastic_plan_impossible_below_tp():
+    ep = ElasticPlan(old_shape=(16, 16), new_devices=8, axis_names=("data", "model"))
+    assert ep.plan() is None
+    assert not ep.can_restore()

@@ -1,0 +1,85 @@
+"""Kernel tests: VCGRA Pallas executor (specialized + conventional) vs the
+pure-jnp oracle, swept over applications, shapes and dtypes."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import for_dfg, map_app, sobel_grid
+from repro.core import applications as apps
+from repro.core.interpreter import pack_inputs
+from repro.kernels.vcgra import vcgra_apply, vcgra_apply_image, vcgra_ref
+from repro.kernels.vcgra.vcgra_kernel import _pack_settings
+
+
+def _setup(app_name, data_bits=32, float_pe=False, shape="exact"):
+    dfg = apps.ALL_APPS[app_name]()
+    grid = for_dfg(dfg, shape=shape, data_bits=data_bits, float_pe=float_pe)
+    cfg = map_app(dfg, grid)
+    return dfg, grid, cfg
+
+
+@pytest.mark.parametrize("app_name", ["sobel_x", "sobel_mag", "gauss3", "threshold"])
+@pytest.mark.parametrize("mode", ["specialized", "conventional"])
+@pytest.mark.parametrize(
+    "hw", [(8, 16), (16, 128), (30, 67)]  # aligned and ragged image shapes
+)
+def test_kernel_matches_ref_int(app_name, mode, hw, rng):
+    dfg, grid, cfg = _setup(app_name)
+    img = jnp.asarray(rng.integers(0, 256, hw).astype(np.int32))
+    taps = apps.stencil_inputs(img)
+    feed = {k: v for k, v in taps.items() if k in cfg.input_order}
+    x = pack_inputs(cfg, feed, grid.dtype)
+    ref = np.asarray(vcgra_ref(grid, cfg, x))
+    out = np.asarray(vcgra_apply(grid, cfg, x, mode=mode, block_n=256))
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("mode", ["specialized", "conventional"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_matches_ref_float(mode, dtype, rng):
+    dfg = apps.sobel_magnitude()
+    grid = for_dfg(dfg, shape="exact", float_pe=True, data_bits=32)
+    cfg = map_app(dfg, grid)
+    img = jnp.asarray(rng.random((16, 32)).astype(np.float32) * 100).astype(dtype)
+    taps = apps.stencil_inputs(img)
+    x = pack_inputs(cfg, taps, dtype)
+    ref = np.asarray(vcgra_ref(grid, cfg, x).astype(jnp.float32))
+    out = np.asarray(
+        vcgra_apply(grid, cfg, x, mode=mode, block_n=128).astype(jnp.float32)
+    )
+    tol = 1e-6 if dtype == jnp.float32 else 0.5
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_n", [128, 256, 1024])
+def test_kernel_block_size_sweep(block_n, rng):
+    dfg, grid, cfg = _setup("sobel_x")
+    img = jnp.asarray(rng.integers(0, 256, (24, 53)).astype(np.int32))
+    out = np.asarray(vcgra_apply_image(grid, cfg, img, block_n=block_n))
+    np.testing.assert_array_equal(out, apps.conv2d_reference(np.asarray(img), apps.SOBEL_X))
+
+
+def test_kernel_on_rect_grid_with_none_pes(rng):
+    """Fig. 5 mapping (45-PE rect grid, 25 NONE PEs) through the kernel."""
+    dfg = apps.sobel_x()
+    grid = sobel_grid()
+    cfg = map_app(dfg, grid)
+    img = jnp.asarray(rng.integers(0, 256, (12, 12)).astype(np.int32))
+    out = np.asarray(vcgra_apply_image(grid, cfg, img, mode="specialized", block_n=128))
+    np.testing.assert_array_equal(out, apps.conv2d_reference(np.asarray(img), apps.SOBEL_X))
+    out_c = np.asarray(
+        vcgra_apply_image(grid, cfg, img, mode="conventional", block_n=128)
+    )
+    np.testing.assert_array_equal(out_c, out)
+
+
+def test_conventional_settings_pack_roundtrip():
+    dfg, grid, cfg = _setup("sobel_mag")
+    ops_arr, sel_arr, out_sel, max_w = _pack_settings(grid, cfg)
+    assert ops_arr.shape == (grid.num_levels, max_w)
+    assert sel_arr.shape == (grid.num_levels, max_w, 2)
+    for lvl in range(grid.num_levels):
+        w = grid.pes_per_level[lvl]
+        np.testing.assert_array_equal(np.asarray(ops_arr)[lvl, :w], cfg.opcodes[lvl])
+        np.testing.assert_array_equal(np.asarray(sel_arr)[lvl, :w], cfg.selects[lvl])

@@ -1,0 +1,85 @@
+"""Optimizer tests: AdamW semantics, schedule, clipping, compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig, adamw_update, compress, decompress, global_norm,
+    init_opt_state, init_error_state, schedule_lr,
+)
+
+
+def _params():
+    return {
+        "w_up": jnp.ones((4, 8)) * 0.5,
+        "ln": {"scale": jnp.zeros((8,))},
+    }
+
+
+def test_adamw_moves_against_gradient():
+    p = _params()
+    g = jax.tree_util.tree_map(jnp.ones_like, p)
+    st = init_opt_state(p)
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, schedule="constant", weight_decay=0.0)
+    p2, st2, m = adamw_update(cfg, p, g, st)
+    assert float(p2["w_up"][0, 0]) < float(p["w_up"][0, 0])
+    assert int(st2["count"]) == 1
+    assert float(m["lr"]) == pytest.approx(0.1)
+
+
+def test_weight_decay_only_on_matrices():
+    p = _params()
+    g = jax.tree_util.tree_map(jnp.zeros_like, p)
+    st = init_opt_state(p)
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, schedule="constant", weight_decay=0.5)
+    p2, _, _ = adamw_update(cfg, p, g, st)
+    # matrix decayed toward zero, norm scale untouched
+    assert float(jnp.abs(p2["w_up"]).max()) < 0.5
+    np.testing.assert_array_equal(np.asarray(p2["ln"]["scale"]), 0.0)
+
+
+def test_grad_clipping():
+    p = {"w": jnp.zeros((4, 4))}
+    g = {"w": jnp.full((4, 4), 100.0)}
+    st = init_opt_state(p)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0, schedule="constant")
+    _, _, m = adamw_update(cfg, p, g, st)
+    assert float(m["grad_norm"]) == pytest.approx(400.0)
+    assert float(m["clip_scale"]) == pytest.approx(1.0 / 400.0)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_ratio=0.1)
+    assert float(schedule_lr(cfg, jnp.asarray(0))) == pytest.approx(0.0)
+    assert float(schedule_lr(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(schedule_lr(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    end = float(schedule_lr(cfg, jnp.asarray(110)))
+    assert end == pytest.approx(0.1, rel=1e-3)
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.ones((4,)) * 2}
+    assert float(global_norm(t)) == pytest.approx(np.sqrt(3 + 16))
+
+
+def test_compression_error_feedback_roundtrip():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal((32, 32)).astype(np.float32))}
+    err = init_error_state(g)
+    comp, err2 = compress(g, err)
+    deq = decompress(comp)
+    # int8 quantisation: bounded error, int8 payload
+    assert comp["q"]["w"].dtype == jnp.int8
+    scale = float(comp["scale"]["w"])
+    assert float(jnp.abs(deq["w"] - g["w"]).max()) <= scale * 0.5 + 1e-6
+    # error feedback carries exactly the residual
+    np.testing.assert_allclose(
+        np.asarray(err2["w"]), np.asarray(g["w"] - deq["w"]), atol=1e-6
+    )
+    # second round: dequant(sum of q) + err converges toward true sum
+    comp2, err3 = compress(g, err2)
+    deq2 = decompress(comp2)
+    total = np.asarray(deq["w"] + deq2["w"])
+    np.testing.assert_allclose(total, 2 * np.asarray(g["w"]), atol=2.1 * scale)

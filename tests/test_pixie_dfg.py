@@ -1,0 +1,99 @@
+"""Unit tests: DFG IR, ASAP levelization, reference oracle, synthesis."""
+
+import numpy as np
+import pytest
+
+from repro.core import DFG, Op, reference_eval, synthesize, SOBEL_SOURCE
+from repro.core import applications as apps
+from repro.core.synthesis import SynthesisError
+
+
+def test_builder_and_levels():
+    g = DFG("t")
+    x, y = g.input("x"), g.input("y")
+    m = g.mul(x, y)          # level 0
+    s = g.add(m, x)          # level 1 (x buffered by mapper later)
+    g.output(s)
+    g.validate()
+    assert g.asap_levels() == [0, 1]
+    assert g.depth() == 2
+    assert g.op_histogram() == {"MUL": 1, "ADD": 1}
+
+
+def test_builder_rejects_bad_refs():
+    g = DFG("t")
+    x = g.input("x")
+    with pytest.raises(ValueError):
+        g.add(x, None)  # binary op needs two operands
+    g2 = DFG("t2")
+    with pytest.raises(ValueError):
+        g2.add_node(Op.ADD, x, x)  # x belongs to another graph
+    with pytest.raises(ValueError):
+        g.input("x")  # duplicate
+    with pytest.raises(ValueError):
+        g.add_node(Op.MAC, x, x)  # MAC not schedulable (paper Sec III-A)
+
+
+def test_validate_requires_outputs():
+    g = DFG("t")
+    g.input("x")
+    with pytest.raises(ValueError):
+        g.validate()
+
+
+def test_reference_eval_basic():
+    g = DFG("t")
+    x, y = g.input("x"), g.input("y")
+    g.output(g.add(g.mul(x, x), y))
+    (out,) = reference_eval(g, {"x": np.array([1, 2, 3]), "y": np.array([10, 10, 10])})
+    assert (out == np.array([11, 14, 19])).all()
+
+
+def test_reference_eval_div_guard():
+    g = DFG("t")
+    x, y = g.input("x"), g.input("y")
+    g.output(g.div(x, y))
+    (out,) = reference_eval(g, {"x": np.array([7, 8]), "y": np.array([2, 0])})
+    assert (out == np.array([3, 0])).all()
+
+
+def test_const_inputs_defaulted():
+    g = DFG("t")
+    x = g.input("x")
+    k = g.const("k", 3.0)
+    g.output(g.mul(x, k))
+    (out,) = reference_eval(g, {"x": np.array([1.0, 2.0])})
+    assert (out == np.array([3.0, 6.0])).all()
+
+
+def test_sobel_graph_matches_paper_shape():
+    g = apps.sobel_x()
+    # 9 muls + 8 adds, depth 5 => fits the 45-PE 5x9 grid of Fig. 5
+    assert g.num_ops() == 17
+    assert g.depth() == 5
+    assert g.op_histogram() == {"MUL": 9, "ADD": 8}
+
+
+def test_synthesis_sobel_equals_reference():
+    g = synthesize("s", SOBEL_SOURCE)
+    img = np.arange(25, dtype=np.int32).reshape(5, 5)
+    taps = {k: np.asarray(v) for k, v in apps.stencil_inputs(img).items()}
+    feed = {k: taps[k] for k in g.inputs if k in taps}
+    (out,) = reference_eval(g, feed)
+    ref = apps.sobel_magnitude_reference(img).reshape(-1)
+    assert (out == ref).all()
+
+
+def test_synthesis_rejects_garbage():
+    with pytest.raises(SynthesisError):
+        synthesize("bad", "out = foo(x)")
+    with pytest.raises(SynthesisError):
+        synthesize("bad", "out = x ** 2")
+    with pytest.raises(SynthesisError):
+        synthesize("bad", "for i in x: pass")
+
+
+def test_synthesis_unary_minus_and_compare():
+    g = synthesize("t", "out = (-x > y) + (x == y)")
+    (out,) = reference_eval(g, {"x": np.array([-5, 2]), "y": np.array([1, 2])})
+    assert (out == np.array([1, 1])).all()

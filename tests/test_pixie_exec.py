@@ -1,0 +1,144 @@
+"""Execution tests: conventional overlay == parameterized == numpy oracle,
+for every library application, in fixed- and floating-point; compile-once
+reconfiguration behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Pixie, for_dfg, map_app, sobel_grid
+from repro.core import applications as apps
+from repro.core.dfg import reference_eval
+from repro.core.interpreter import make_overlay_fn, pack_inputs
+
+APP_ORACLES = {
+    "sobel_x": lambda img: apps.conv2d_reference(img, apps.SOBEL_X),
+    "sobel_y": lambda img: apps.conv2d_reference(img, apps.SOBEL_Y),
+    "sobel_mag": apps.sobel_magnitude_reference,
+    "gauss3": lambda img: apps.conv2d_reference(img, apps.GAUSS3, divisor=16.0),
+    "sharpen": lambda img: apps.conv2d_reference(img, apps.SHARPEN),
+    "laplace": lambda img: apps.conv2d_reference(img, apps.LAPLACE),
+    "box3": lambda img: apps.conv2d_reference(img, apps.BOX3, divisor=9.0),
+    "threshold": lambda img: (img > 128).astype(img.dtype),
+    "identity": lambda img: img,
+}
+
+
+@pytest.mark.parametrize("app_name", sorted(apps.ALL_APPS))
+@pytest.mark.parametrize("mode", ["conventional", "parameterized"])
+def test_app_matches_oracle_fixed_point(app_name, mode, rng):
+    img = rng.integers(0, 256, (12, 17)).astype(np.int32)
+    dfg = apps.ALL_APPS[app_name]()
+    grid = for_dfg(dfg, shape="exact", data_bits=32)
+    pix = Pixie(grid, mode=mode)
+    pix.load(map_app(dfg, grid), batch=img.size)
+    out = np.asarray(pix.run_image(jnp.asarray(img)))
+    ref = APP_ORACLES[app_name](img)
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("app_name", ["sobel_mag", "gauss3", "threshold"])
+@pytest.mark.parametrize("mode", ["conventional", "parameterized"])
+def test_app_matches_oracle_float(app_name, mode, rng):
+    img = rng.random((9, 11)).astype(np.float32) * 255.0
+    dfg = apps.ALL_APPS[app_name]()
+    grid = for_dfg(dfg, shape="exact", data_bits=32, float_pe=True)
+    pix = Pixie(grid, mode=mode)
+    pix.load(map_app(dfg, grid), batch=img.size)
+    out = np.asarray(pix.run_image(jnp.asarray(img)))
+    ref = APP_ORACLES[app_name](img)
+    np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-4)
+
+
+def test_rect_grid_with_none_pes_still_correct(rng):
+    """Fig. 5 style: map Sobel on the rectangular 45-PE grid (25 NONE PEs)."""
+    img = rng.integers(0, 256, (8, 9)).astype(np.int32)
+    dfg = apps.sobel_x()
+    grid = sobel_grid()
+    pix = Pixie(grid, mode="conventional")
+    pix.load(map_app(dfg, grid))
+    out = np.asarray(pix.run_image(jnp.asarray(img)))
+    np.testing.assert_array_equal(out, apps.conv2d_reference(img, apps.SOBEL_X))
+
+
+def test_conventional_reconfig_does_not_recompile(rng):
+    """The overlay's central claim: swapping the application = swapping
+    settings arrays; the jitted interpreter executable is reused."""
+    img = rng.integers(0, 256, (10, 10)).astype(np.int32)
+    dfg_a, dfg_b = apps.sobel_x(), apps.sobel_y()
+    grid = sobel_grid()
+    pix = Pixie(grid, mode="conventional")
+    pix.compile_overlay(batch=img.size)
+    pix.load(map_app(dfg_a, grid))
+    out_a = np.asarray(pix.run_image(jnp.asarray(img)))
+    n_compiles_after_first = pix._overlay_fn._cache_size()
+    pix.load(map_app(dfg_b, grid))
+    out_b = np.asarray(pix.run_image(jnp.asarray(img)))
+    assert pix._overlay_fn._cache_size() == n_compiles_after_first
+    np.testing.assert_array_equal(out_a, apps.conv2d_reference(img, apps.SOBEL_X))
+    np.testing.assert_array_equal(out_b, apps.conv2d_reference(img, apps.SOBEL_Y))
+
+
+def test_multiple_graph_instances_on_one_grid(rng):
+    """Paper Sec. III: 'If the grid is big enough, multiple instances of
+    the same graph can be implemented' -- sobel_mag runs two convolution
+    trees on one grid."""
+    img = rng.integers(0, 256, (6, 7)).astype(np.int32)
+    dfg = apps.sobel_magnitude()
+    grid = for_dfg(dfg, shape="rect")  # one rectangular grid, both trees
+    pix = Pixie(grid, mode="parameterized")
+    pix.load(map_app(dfg, grid), batch=img.size)
+    out = np.asarray(pix.run_image(jnp.asarray(img)))
+    np.testing.assert_array_equal(out, apps.sobel_magnitude_reference(img))
+
+
+def test_bake_consts_specialization(rng):
+    """Second-level specialization: coefficients burned into the datapath."""
+    img = rng.integers(0, 256, (5, 8)).astype(np.int32)
+    dfg = apps.sobel_x()
+    grid = for_dfg(dfg, shape="exact")
+    pix = Pixie(grid, mode="parameterized", bake_consts=True)
+    pix.load(map_app(dfg, grid), batch=img.size)
+    out = np.asarray(pix.run_image(jnp.asarray(img)))
+    np.testing.assert_array_equal(out, apps.conv2d_reference(img, apps.SOBEL_X))
+
+
+def test_pack_inputs_const_defaults(rng):
+    dfg = apps.sobel_x()
+    grid = for_dfg(dfg, shape="exact")
+    cfg = map_app(dfg, grid)
+    taps = apps.stencil_inputs(jnp.ones((4, 4), jnp.int32))
+    x = pack_inputs(cfg, taps, jnp.int32)
+    assert x.shape == (len(cfg.input_order), 16)
+    # coefficient rows carry their const defaults
+    for i, name in enumerate(cfg.input_order):
+        if name in cfg.const_values:
+            assert np.all(np.asarray(x[i]) == cfg.const_values[name])
+
+
+def test_missing_input_raises(rng):
+    dfg = apps.sobel_x()
+    grid = for_dfg(dfg, shape="exact")
+    pix = Pixie(grid, mode="conventional")
+    pix.load(map_app(dfg, grid))
+    with pytest.raises(KeyError):
+        pix(p00=jnp.zeros((4,), jnp.int32))  # taps missing
+
+    fresh = Pixie(grid, mode="conventional")
+    with pytest.raises(RuntimeError, match="no application loaded"):
+        fresh(p00=jnp.zeros((4,), jnp.int32))
+
+
+def test_reference_eval_agrees_with_overlay_on_raw_graph(rng):
+    dfg = apps.laplace()
+    grid = for_dfg(dfg, shape="exact")
+    cfg = map_app(dfg, grid)
+    img = rng.integers(0, 64, (6, 6)).astype(np.int32)
+    taps = {k: np.asarray(v) for k, v in apps.stencil_inputs(jnp.asarray(img)).items()}
+    feed = {k: taps[k] for k in dfg.inputs if k in taps}
+    (ref_out,) = reference_eval(dfg, feed)
+    pix = Pixie(grid, mode="conventional")
+    pix.load(cfg)
+    out = np.asarray(pix(**feed))[0]
+    np.testing.assert_array_equal(out, ref_out)

@@ -1,0 +1,148 @@
+"""Unit tests: mapper/placer, router, bitstream, grid generator."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DFG, Op, PlacementError, RoutingError, VCGRAConfig,
+    for_dfg, level_demand, map_app, paper_4x4, place, rectangular,
+    route, sobel_grid,
+)
+from repro.core import applications as apps
+from repro.core.grid import custom
+
+
+def test_sobel_placement_matches_paper():
+    """Paper Sec. IV/V-D: Sobel = 45 PEs + 4 inter-level VCs; the majority
+    of PEs on the rectangular grid end up configured NONE."""
+    g = apps.sobel_x()
+    grid = sobel_grid()
+    assert grid.num_pes == 45
+    assert grid.num_levels == 5
+    pl = place(g, grid)
+    st = pl.stats()
+    assert st["op_pes"] == 17            # 9 MUL + 8 ADD
+    assert st["buf_pes"] == 3            # leftover product carried 3 stages
+    assert st["none_pes"] == 25          # majority NONE, as the paper notes
+    assert st["none_pes"] > grid.num_pes // 2
+
+
+def test_buf_chain_for_level_skipping_edge():
+    g = DFG("skip")
+    x, y = g.input("x"), g.input("y")
+    a = g.mul(x, y)        # L0
+    b = g.add(a, a)        # L1
+    c = g.add(b, b)        # L2
+    d = g.add(c, a)        # L3: 'a' (L0) must be buffered through L1, L2
+    g.output(d)
+    demand = level_demand(g)
+    assert demand == [1, 2, 2, 1]  # BUF carriers at L1 and L2
+    grid = for_dfg(g, shape="exact")
+    pl = place(g, grid)
+    assert pl.num_buf == 2
+
+
+def test_inputs_buffered_down_from_level0():
+    g = DFG("late_input")
+    x, y, z = g.input("x"), g.input("y"), g.input("z")
+    a = g.mul(x, y)     # L0
+    b = g.add(a, z)     # L1: input z needs a BUF at L0
+    g.output(b)
+    assert level_demand(g) == [2, 1]
+
+
+def test_outputs_buffered_to_bottom():
+    """Paper: 'an output value has to be buffered in every stage until it
+    reaches the data output channel at the bottom'."""
+    g = DFG("t")
+    x, y = g.input("x"), g.input("y")
+    g.output(g.add(x, y))   # depth 1
+    deep = rectangular("deep", 2, levels=4, width=2, num_outputs=1)
+    pl = place(g, deep)
+    assert pl.num_buf == 3  # carried through 3 extra levels
+    cfg = map_app(g, deep)
+    assert [int(o[0]) for o in cfg.opcodes] == [
+        int(Op.ADD), int(Op.BUF), int(Op.BUF), int(Op.BUF)
+    ]
+
+
+def test_capacity_overflow_raises():
+    g = apps.sobel_x()
+    tiny = rectangular("tiny", 18, levels=5, width=4, num_outputs=1)
+    with pytest.raises(PlacementError, match="level 0 needs 9"):
+        place(g, tiny)
+
+
+def test_too_few_memory_inputs_raises():
+    g = apps.sobel_x()
+    narrow = rectangular("narrow", 4, levels=5, width=9, num_outputs=1)
+    with pytest.raises(PlacementError, match="memory inputs"):
+        place(g, narrow)
+
+
+def test_too_shallow_grid_raises():
+    g = apps.sobel_x()
+    shallow = rectangular("shallow", 18, levels=3, width=16, num_outputs=1)
+    with pytest.raises(PlacementError, match="depth"):
+        place(g, shallow)
+
+
+def test_route_selects_in_range():
+    g = apps.sobel_magnitude()
+    grid = for_dfg(g, shape="exact")
+    pl = place(g, grid)
+    rt = route(pl, grid)
+    for lvl, sel in enumerate(rt.sel):
+        assert sel.min() >= 0
+        assert sel.max() < grid.vc_in_width(lvl)
+    assert rt.out_sel.max() < grid.pes_per_level[-1]
+
+
+def test_grid_generator_shapes():
+    g = apps.sobel_x()
+    exact = for_dfg(g, shape="exact")
+    rect = for_dfg(g, shape="rect")
+    tri = for_dfg(g, shape="triangular")
+    assert exact.pes_per_level == (9, 5, 3, 2, 1)
+    assert rect.pes_per_level == (9,) * 5
+    # triangular: monotonically non-increasing, fits demand
+    assert all(a >= b for a, b in zip(tri.pes_per_level, tri.pes_per_level[1:]))
+    for spec in (exact, rect, tri):
+        place(g, spec)  # must all fit
+
+
+def test_resource_model_eq1_to_eq3():
+    grid = paper_4x4()
+    p = grid.channel_params(0)
+    assert p["M_valid_vector"] == 8             # Eq. (2): #predecessors
+    assert p["bw_mux_config_word"] == 3         # Eq. (3): ceil(log2(8))
+    p1 = grid.channel_params(1)
+    assert p1["M_valid_vector"] == 4
+    assert p1["bw_mux_config_word"] == 2
+    rm = grid.resource_model()
+    assert rm["pes"] == 16
+    assert rm["vcs"] == 5
+    assert rm["total_bits"] == rm["pe_bits"] + rm["vc_bits"]
+
+
+def test_bitstream_roundtrip_json():
+    g = apps.gaussian_blur()
+    grid = for_dfg(g, shape="exact")
+    cfg = map_app(g, grid)
+    cfg2 = VCGRAConfig.from_json(cfg.to_json())
+    assert cfg2.app_name == cfg.app_name
+    assert cfg2.input_order == cfg.input_order
+    for a, b in zip(cfg.opcodes, cfg2.opcodes):
+        assert (a == b).all()
+    for a, b in zip(cfg.selects, cfg2.selects):
+        assert (a == b).all()
+    assert (cfg.out_sel == cfg2.out_sel).all()
+    assert cfg2.const_values == cfg.const_values
+
+
+def test_custom_grid_per_level_widths():
+    spec = custom("c", 4, [3, 1, 2], num_outputs=2)
+    assert spec.num_pes == 6
+    assert spec.vc_in_width(0) == 4
+    assert spec.vc_in_width(2) == 1
+    assert spec.vc_out_ports(1) == 2
