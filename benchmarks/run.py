@@ -4,6 +4,7 @@
   compile_time       Sec. V-E analogue (overlay compile / map / reconfig gap)
   sobel_throughput   Sec. IV demo (four execution paths of the same Sobel)
   roofline_table     arch x shape roofline from dry-run artifacts (§Roofline)
+  fleet_throughput   multi-tenant batched overlay vs sequential dispatch
 
 Prints ``name,us_per_call,derived`` CSV rows at the end for machine
 consumption, after the human-readable tables.
@@ -17,7 +18,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import compile_time, resource_table, roofline_table, sobel_throughput
+    from benchmarks import (
+        compile_time, fleet_throughput, resource_table, roofline_table,
+        sobel_throughput,
+    )
 
     csv_rows = [("name", "us_per_call", "derived")]
     failures = []
@@ -80,6 +84,21 @@ def main() -> None:
     except Exception as e:
         traceback.print_exc()
         failures.append(("roofline_table", e))
+
+    print()
+    print("=" * 72)
+    print("Benchmark 5: fleet throughput (multi-tenant batched overlay)")
+    print("=" * 72)
+    try:
+        r = fleet_throughput.main(["--smoke"])
+        csv_rows.append((
+            "fleet/batched_vs_sequential",
+            f"{1e6 / r['batched_apps_per_s']:.1f}",
+            f"speedup={r['speedup']:.2f};apps={r['n_apps']}",
+        ))
+    except Exception as e:
+        traceback.print_exc()
+        failures.append(("fleet_throughput", e))
 
     print()
     print("name,us_per_call,derived")

@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -35,6 +35,9 @@ class VCGRAConfig:
     out_sel: np.ndarray              # int32 [num_outputs]
     input_order: Tuple[str, ...]     # memory-VC channel ordering
     const_values: Dict[str, float]   # default coefficient values
+    # Stable identity set by caching layers (runtime/fleet.py): the DFG
+    # structural hash + grid.  None for configs assembled outside a cache.
+    cache_key: Optional[str] = None
 
     # -- conventional-path form (settings registers as device arrays) ------
 
@@ -43,6 +46,55 @@ class VCGRAConfig:
             tuple(jnp.asarray(o) for o in self.opcodes),
             tuple(jnp.asarray(s) for s in self.selects),
             jnp.asarray(self.out_sel),
+        )
+
+    # -- multi-tenant form (stacked settings registers) ----------------------
+
+    def config_shapes(self) -> Tuple:
+        """Shape signature of the settings arrays.  Two configs with equal
+        signatures were mapped on structurally identical grids and can be
+        stacked into one batched settings bank."""
+        return (
+            tuple(o.shape for o in self.opcodes),
+            tuple(s.shape for s in self.selects),
+            tuple(self.out_sel.shape),
+        )
+
+    @staticmethod
+    def stack(configs: Sequence["VCGRAConfig"]):
+        """Stack N same-grid configs into batched settings arrays.
+
+        Every application mapped on one grid yields identically-shaped
+        config arrays (the invariant ``make_overlay_fn`` exploits for its
+        compile-once claim); stacking them along a new leading axis is the
+        multi-tenant extension: one vmapped overlay executable then runs N
+        *different* applications in a single dispatch
+        (``interpreter.make_batched_overlay_fn``).
+
+        Returns ``(opcodes, selects, out_sel)`` with per-level leaves of
+        shape ``[N, pes]`` / ``[N, pes, 2]`` and ``out_sel: [N, num_outputs]``.
+        """
+        if not configs:
+            raise ValueError("cannot stack an empty config list")
+        sig = configs[0].config_shapes()
+        for c in configs[1:]:
+            if c.config_shapes() != sig:
+                raise ValueError(
+                    f"config {c.app_name!r} (grid {c.grid_name!r}) does not "
+                    f"match the stack's grid {configs[0].grid_name!r}: "
+                    f"{c.config_shapes()} != {sig}"
+                )
+        num_levels = len(configs[0].opcodes)
+        return (
+            tuple(
+                jnp.stack([jnp.asarray(c.opcodes[lvl]) for c in configs])
+                for lvl in range(num_levels)
+            ),
+            tuple(
+                jnp.stack([jnp.asarray(c.selects[lvl]) for c in configs])
+                for lvl in range(num_levels)
+            ),
+            jnp.stack([jnp.asarray(c.out_sel) for c in configs]),
         )
 
     # -- size accounting (the "bitstream size" analogue) --------------------

@@ -177,6 +177,34 @@ class DFG:
             h[n.op.name] = h.get(n.op.name, 0) + 1
         return h
 
+    def structural_hash(self) -> str:
+        """Stable content hash of the graph (name, inputs, consts, nodes,
+        outputs).  Two DFGs with equal hashes map to identical settings on
+        a given grid, so the hash is the cache key that lets a multi-tenant
+        runtime skip place/route for repeat tenants (see runtime/fleet.py).
+
+        The preimage is JSON, not delimiter-joined strings: names may
+        contain any character without creating cross-field collisions."""
+        import hashlib
+        import json
+
+        def ref_key(r: Optional[Ref]):
+            if r is None:
+                return None
+            if isinstance(r, InRef):
+                return ["i", r.name]
+            return ["n", r.idx]
+
+        doc = {
+            "name": self.name,
+            "inputs": self.inputs,
+            "consts": {k: self.const_values[k] for k in sorted(self.const_values)},
+            "nodes": [[n.op.name, ref_key(n.a), ref_key(n.b)] for n in self.nodes],
+            "outputs": [ref_key(r) for r in self.outputs],
+        }
+        blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()
+
     def consumers(self) -> Dict[Ref, List[int]]:
         out: Dict[Ref, List[int]] = {}
         for i, n in enumerate(self.nodes):

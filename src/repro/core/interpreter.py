@@ -93,6 +93,93 @@ def make_overlay_fn(grid: GridSpec):
     return jax.jit(partial(overlay_step, grid))
 
 
+def batched_overlay_step(
+    grid: GridSpec, configs: ConfigArrays, xs: jnp.ndarray
+) -> jnp.ndarray:
+    """N applications through one overlay in a single dispatch.
+
+    ``configs``: stacked settings (``VCGRAConfig.stack``), leaves carrying a
+    leading app axis N; ``xs``: [N, num_inputs, batch].  Semantically this
+    is ``jax.vmap(overlay_step)`` over the app axis -- the software
+    analogue of N tenant bitstreams resident in one physical overlay -- but
+    the VC muxes are lowered by hand: per-app selects are offset into one
+    flat [N*rows, batch] value bank so each level is a single plain gather
+    (identical to the sequential path's ``jnp.take``), not a
+    batched-indices gather, which XLA:CPU lowers an order of magnitude
+    slower.
+    """
+    opcodes, selects, out_sel = configs
+    assert len(opcodes) == grid.num_levels
+    n = xs.shape[0]
+    x = xs
+    for lvl in range(grid.num_levels):
+        rows = x.shape[1]
+        flat = x.reshape((n * rows,) + x.shape[2:])
+        offs = (jnp.arange(n, dtype=selects[lvl].dtype) * rows)[:, None]
+        a = jnp.take(flat, (selects[lvl][:, :, 0] + offs).reshape(-1), axis=0)
+        b = jnp.take(flat, (selects[lvl][:, :, 1] + offs).reshape(-1), axis=0)
+        shape = (n, -1) + x.shape[2:]
+        x = pe_ops.apply_generic(opcodes[lvl], a.reshape(shape), b.reshape(shape))
+    rows = x.shape[1]
+    flat = x.reshape((n * rows,) + x.shape[2:])
+    offs = (jnp.arange(n, dtype=out_sel.dtype) * rows)[:, None]
+    y = jnp.take(flat, (out_sel + offs).reshape(-1), axis=0)
+    return y.reshape((n, -1) + x.shape[2:])
+
+
+def make_batched_overlay_fn(grid: GridSpec):
+    """Build the jit-once *multi-tenant* overlay executor for a grid.
+
+    Returns ``fn(stacked_configs, xs) -> ys`` with
+    ``xs: [N, num_inputs, batch] -> ys: [N, num_outputs, batch]``.
+    Like :func:`make_overlay_fn` the executable depends only on the grid
+    structure and the (N, batch) shape -- any N applications mapped on the
+    grid share it, so a fleet scheduler that pads to fixed (N, batch) tiles
+    compiles exactly once per grid.
+    """
+    return jax.jit(partial(batched_overlay_step, grid))
+
+
+def pad_channels(x: jnp.ndarray, num_inputs: int) -> jnp.ndarray:
+    """Zero-pad the channel axis of ``x: [k, batch]`` up to the grid's
+    memory-VC width.  Applications rarely use every memory channel; mux
+    selects never reference the padded rows, so batching apps with
+    different input counts on one grid stays exact."""
+    k = x.shape[0]
+    if k > num_inputs:
+        raise ValueError(f"app uses {k} input channels, grid has {num_inputs}")
+    if k == num_inputs:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((num_inputs - k,) + x.shape[1:], x.dtype)], axis=0
+    )
+
+
+def pad_batches(xs, pad_to: int):
+    """Zero-pad every ``[channels, batch]`` input to ``pad_to`` columns."""
+    return [
+        jnp.pad(x, ((0, 0), (0, pad_to - x.shape[-1]))) if x.shape[-1] < pad_to else x
+        for x in xs
+    ]
+
+
+def stack_for_dispatch(configs, xs, batch_pad=None):
+    """Pad-and-stack step of a multi-tenant dispatch (`Pixie.run_many`):
+    zero-pad ragged pixel batches to one length, stack configs and inputs
+    along the app axis.  `runtime.fleet.PixieFleet.flush` shares the same
+    primitives (`pad_batches` + `VCGRAConfig.stack`) but routes the config
+    stack through its cross-flush bank cache instead of calling this.
+
+    Returns ``(stacked_configs, xstack, batches)`` where ``batches`` are
+    the original per-app batch lengths for slicing the outputs back.
+    """
+    batches = [x.shape[-1] for x in xs]
+    pad_to = batch_pad if batch_pad is not None else max(batches)
+    if pad_to < max(batches):
+        raise ValueError(f"batch_pad={pad_to} < largest request {max(batches)}")
+    return VCGRAConfig.stack(configs), jnp.stack(pad_batches(xs, pad_to)), batches
+
+
 def run_app(
     grid: GridSpec,
     config: VCGRAConfig,

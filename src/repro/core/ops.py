@@ -112,17 +112,19 @@ def apply_generic(opcode: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray) -> jnp.nd
     """
     if opcode.ndim == a.ndim - 1:
         opcode = opcode[..., None]
+    # Plain-int comparisons: enum members would become captured scalar
+    # constants inside pallas kernel bodies, which pallas_call rejects.
     out = jnp.zeros_like(a)
-    out = jnp.where(opcode == Op.ADD, a + b, out)
-    out = jnp.where(opcode == Op.SUB, a - b, out)
-    out = jnp.where(opcode == Op.MUL, a * b, out)
-    out = jnp.where(opcode == Op.DIV, _safe_div(a, b), out)
-    out = jnp.where(opcode == Op.GT, (a > b).astype(a.dtype), out)
-    out = jnp.where(opcode == Op.EQ, (a == b).astype(a.dtype), out)
-    out = jnp.where(opcode == Op.BUF, a, out)
-    out = jnp.where(opcode == Op.MAX, jnp.maximum(a, b), out)
-    out = jnp.where(opcode == Op.MIN, jnp.minimum(a, b), out)
-    out = jnp.where(opcode == Op.ABS, jnp.abs(a), out)
+    out = jnp.where(opcode == int(Op.ADD), a + b, out)
+    out = jnp.where(opcode == int(Op.SUB), a - b, out)
+    out = jnp.where(opcode == int(Op.MUL), a * b, out)
+    out = jnp.where(opcode == int(Op.DIV), _safe_div(a, b), out)
+    out = jnp.where(opcode == int(Op.GT), (a > b).astype(a.dtype), out)
+    out = jnp.where(opcode == int(Op.EQ), (a == b).astype(a.dtype), out)
+    out = jnp.where(opcode == int(Op.BUF), a, out)
+    out = jnp.where(opcode == int(Op.MAX), jnp.maximum(a, b), out)
+    out = jnp.where(opcode == int(Op.MIN), jnp.minimum(a, b), out)
+    out = jnp.where(opcode == int(Op.ABS), jnp.abs(a), out)
     return out
 
 

@@ -18,6 +18,7 @@ An auxiliary load-balance loss (Switch-style) is returned for training.
 
 from __future__ import annotations
 
+import functools
 from typing import Dict, Tuple
 
 import jax
@@ -247,7 +248,13 @@ def moe_ffn_ep(
         )
         return y.reshape(xb.shape), aux
 
-    y, aux = jax.shard_map(
+    if hasattr(jax, "shard_map"):
+        smap = functools.partial(jax.shard_map, check_vma=False)
+    else:  # jax < 0.5: experimental API, check_rep instead of check_vma
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        smap = functools.partial(_shard_map, check_rep=False)
+    y, aux = smap(
         per_shard,
         mesh=mesh,
         in_specs=(
@@ -256,7 +263,6 @@ def moe_ffn_ep(
             w_spec, w_spec, wd_spec,
         ),
         out_specs=(P(batch_spec, None, None), P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
 
     if "shared" in params:

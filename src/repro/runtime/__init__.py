@@ -1,5 +1,9 @@
 from repro.runtime.fault_tolerance import (
     ElasticPlan, HeartbeatMonitor, RunState, resume_or_init,
 )
+from repro.runtime.fleet import FleetRequest, FleetStats, LRUCache, PixieFleet
 
-__all__ = ["ElasticPlan", "HeartbeatMonitor", "RunState", "resume_or_init"]
+__all__ = [
+    "ElasticPlan", "HeartbeatMonitor", "RunState", "resume_or_init",
+    "FleetRequest", "FleetStats", "LRUCache", "PixieFleet",
+]

@@ -1,0 +1,332 @@
+"""Pixie fleet: a multi-tenant batched scheduler for VCGRA overlays.
+
+The paper's economics (Sec. V-E) are compile-once / reconfigure-in-ms:
+one physical overlay amortizes its ~1200 s FPGA compile across every
+application mapped onto it.  This module pushes the amortization one step
+further: because every application mapped on a grid yields
+identically-shaped settings arrays, N *different* tenants can be stacked
+(``VCGRAConfig.stack``) and executed by one vmapped overlay executable in
+a single dispatch (``interpreter.make_batched_overlay_fn``) -- the
+serving-throughput analogue of resident multi-context bitstreams.
+
+Scheduling model:
+
+* requests name an application (a :class:`DFG` or a library app name) plus
+  its pixel inputs (named channels or a whole image);
+* requests are grouped by :class:`GridSpec` -- only same-structure overlays
+  share an executable;
+* each group is padded to fixed (N, batch) tiles so repeated flushes hit
+  the same compiled executable (no shape-driven recompiles);
+* mapped configs are cached by DFG structural hash: a repeat tenant costs
+  zero place/route work;
+* compiled batched overlays are cached per grid in a small LRU.
+
+All padding is exact: padded app slots replay an already-valid config on
+zero inputs and are discarded, padded pixels are sliced off, so fleet
+outputs are bitwise identical to sequential `Pixie` runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import applications as app_lib
+from repro.core import grid as gridlib
+from repro.core import interpreter
+from repro.core.bitstream import VCGRAConfig
+from repro.core.dfg import DFG
+from repro.core.grid import GridSpec
+from repro.core.pixie import map_app
+
+
+class LRUCache:
+    """Tiny ordered-dict LRU with hit/miss counters (no external deps)."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._d: "OrderedDict[Any, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Any) -> Optional[Any]:
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Any, value: Any) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._d
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    """One tenant's work item.
+
+    ``app``: a DFG, a pre-mapped VCGRAConfig, or a library app name
+    (``repro.core.applications.ALL_APPS``).
+    ``inputs``: named memory-VC channels, or ``image``: an [H, W] array fed
+    through the stencil line-buffer helper.  ``grid`` overrides the fleet's
+    default overlay for this request.
+    """
+
+    app: Union[DFG, VCGRAConfig, str]
+    inputs: Optional[Dict[str, Any]] = None
+    image: Optional[Any] = None
+    grid: Optional[GridSpec] = None
+
+
+@dataclasses.dataclass
+class FleetStats:
+    submitted: int = 0
+    executed: int = 0
+    dispatches: int = 0          # batched overlay launches
+    padded_app_slots: int = 0    # wasted N-axis slots from tile rounding
+    map_calls: int = 0           # place/route runs (config-cache misses)
+    config_cache_hits: int = 0
+    overlay_builds: int = 0      # batched executables built (per GridSpec)
+    overlay_cache_hits: int = 0
+    stack_bank_hits: int = 0     # stacked settings banks reused across flushes
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def _round_up(n: int, tile: int) -> int:
+    return ((n + tile - 1) // tile) * tile
+
+
+def _pow2_bucket(n: int, floor: int) -> int:
+    b = max(floor, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+class PixieFleet:
+    """Accepts per-app requests and serves them in vmapped batches.
+
+    >>> fleet = PixieFleet()
+    >>> t1 = fleet.submit(FleetRequest(app="sobel_x", image=img))
+    >>> t2 = fleet.submit(FleetRequest(app="threshold", image=img))
+    >>> outs = fleet.flush()          # ONE overlay dispatch for both
+    >>> outs[t1].shape
+    (32, 32)
+    """
+
+    def __init__(
+        self,
+        default_grid: Optional[GridSpec] = None,
+        batch_tile: int = 8,
+        min_pixel_batch: int = 256,
+        max_overlays: int = 8,
+        max_configs: int = 256,
+        max_retained_results: int = 1024,
+    ):
+        self.default_grid = default_grid or gridlib.sobel_grid()
+        self.batch_tile = int(batch_tile)
+        self.min_pixel_batch = int(min_pixel_batch)
+        self._overlays = LRUCache(max_overlays)
+        self._configs = LRUCache(max_configs)
+        # Stacked settings banks: a repeat flush of the same tenant set
+        # skips re-stacking N configs (keyed by their cache identities).
+        self._banks = LRUCache(4 * max_overlays)
+        self.stats = FleetStats()
+        self._pending: List[Tuple[int, Tuple]] = []
+        # Bounded: unredeemed tickets are evicted oldest-first so a service
+        # that only consumes flush()'s return value cannot leak memory.
+        self._results: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self.max_retained_results = int(max_retained_results)
+        self._next_ticket = 0
+        self.timings: Dict[str, float] = {}
+
+    # -- caches ---------------------------------------------------------------
+
+    def config_for(self, app: Union[DFG, VCGRAConfig, str], grid: GridSpec) -> VCGRAConfig:
+        """Mapped settings for (app, grid); place/route runs at most once
+        per distinct DFG structure (the repeat-tenant fast path)."""
+        if isinstance(app, VCGRAConfig):
+            expected = (
+                tuple((p,) for p in grid.pes_per_level),
+                tuple((p, 2) for p in grid.pes_per_level),
+                (grid.num_outputs,),
+            )
+            if app.config_shapes() != expected:
+                raise ValueError(
+                    f"config {app.app_name!r} was mapped on grid "
+                    f"{app.grid_name!r}, which does not match {grid.name!r}"
+                )
+            return app
+        dfg = app_lib.ALL_APPS[app]() if isinstance(app, str) else app
+        key = (dfg.structural_hash(), grid)
+        cfg = self._configs.get(key)
+        if cfg is not None:
+            self.stats.config_cache_hits += 1
+            return cfg
+        cfg = map_app(dfg, grid)
+        cfg.cache_key = f"{key[0]}@{grid.name}"
+        self.stats.map_calls += 1
+        self._configs.put(key, cfg)
+        return cfg
+
+    def overlay_for(self, grid: GridSpec) -> Callable:
+        """The jitted batched overlay executor for ``grid`` -- built once
+        per grid structure, shared by every tile shape via XLA's own
+        shape-keyed jit cache."""
+        fn = self._overlays.get(grid)
+        if fn is not None:
+            self.stats.overlay_cache_hits += 1
+            return fn
+        fn = interpreter.make_batched_overlay_fn(grid)
+        self.stats.overlay_builds += 1
+        self._overlays.put(grid, fn)
+        return fn
+
+    def overlay_executable_count(self, grid: Optional[GridSpec] = None) -> int:
+        """Number of XLA executables compiled for a grid's batched overlay
+        (one per distinct padded tile shape; 1 when tiling is doing its
+        job).  Returns -1 when the running jax has no jit cache introspection
+        (``_cache_size`` is not public API); ``stats.overlay_builds`` is the
+        version-stable counter."""
+        fn = self._overlays._d.get(grid or self.default_grid)
+        if fn is None:
+            return 0
+        sizer = getattr(fn, "_cache_size", None)
+        return int(sizer()) if callable(sizer) else -1
+
+    # -- request intake -------------------------------------------------------
+
+    def submit(self, request: FleetRequest) -> int:
+        """Queue one request; returns a ticket redeemed by :meth:`flush`.
+
+        Mapping and input packing happen HERE, not at flush time: an
+        unmappable app or a missing input raises immediately to its own
+        submitter and can never poison a batch of other tenants' queued
+        work.
+        """
+        if (request.inputs is None) == (request.image is None):
+            raise ValueError("exactly one of inputs= or image= must be given")
+        prepared = self._prepare(request)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, prepared))
+        self.stats.submitted += 1
+        return ticket
+
+    def result(self, ticket: int) -> np.ndarray:
+        """Redeem a flushed ticket (pops it from the retained results)."""
+        return self._results.pop(ticket)
+
+    def discard(self, ticket: int) -> None:
+        """Drop a retained result without redeeming it (callers that consume
+        flush()'s return value directly use this to release retention)."""
+        self._results.pop(ticket, None)
+
+    def _stacked_bank(self, grid: GridSpec, configs: List[VCGRAConfig]):
+        """Stacked settings for a tenant set, cached across flushes when
+        every config carries a cache identity (i.e. came through
+        :meth:`config_for`)."""
+        keys = tuple(c.cache_key for c in configs)
+        if any(k is None for k in keys):
+            return VCGRAConfig.stack(configs)
+        bkey = (grid, keys)
+        stacked = self._banks.get(bkey)
+        if stacked is not None:
+            self.stats.stack_bank_hits += 1
+            return stacked
+        stacked = VCGRAConfig.stack(configs)
+        self._banks.put(bkey, stacked)
+        return stacked
+
+    # -- batched execution ----------------------------------------------------
+
+    def _prepare(
+        self, request: FleetRequest
+    ) -> Tuple[GridSpec, VCGRAConfig, jnp.ndarray, Optional[Tuple[int, int]]]:
+        grid = request.grid or self.default_grid
+        cfg = self.config_for(request.app, grid)
+        if request.image is not None:
+            image = jnp.asarray(request.image)
+            hw = tuple(image.shape)
+            taps = app_lib.stencil_inputs(image)
+            feed = {k: v for k, v in taps.items() if k in cfg.input_order}
+        else:
+            hw = None
+            feed = request.inputs
+        x = interpreter.pack_inputs(cfg, feed, grid.dtype)
+        if x.ndim != 2:
+            raise ValueError(f"fleet needs flat [channels, batch] inputs, got {x.shape}")
+        return grid, cfg, interpreter.pad_channels(x, grid.num_inputs), hw
+
+    def flush(self) -> Dict[int, np.ndarray]:
+        """Run every pending request; one overlay dispatch per grid group.
+
+        Returns {ticket: output}; image requests come back as [H, W] (or
+        [num_outputs, H, W]), channel requests as [num_outputs, batch].
+        """
+        pending, self._pending = self._pending, []
+        groups: Dict[GridSpec, List[Tuple[int, VCGRAConfig, jnp.ndarray, Any]]] = {}
+        for ticket, (grid, cfg, x, hw) in pending:
+            groups.setdefault(grid, []).append((ticket, cfg, x, hw))
+
+        out: Dict[int, np.ndarray] = {}
+        t0 = time.perf_counter()
+        for grid, items in groups.items():
+            fn = self.overlay_for(grid)
+            n = len(items)
+            n_tile = _round_up(n, self.batch_tile)
+            batch = _pow2_bucket(max(x.shape[-1] for _, _, x, _ in items),
+                                 self.min_pixel_batch)
+            configs = [cfg for _, cfg, _, _ in items]
+            xs = interpreter.pad_batches([x for _, _, x, _ in items], batch)
+            # Tile padding on the app axis: replay config[0] on zero pixels.
+            configs += [configs[0]] * (n_tile - n)
+            xs += [jnp.zeros_like(xs[0])] * (n_tile - n)
+            self.stats.padded_app_slots += n_tile - n
+
+            ys = fn(self._stacked_bank(grid, configs), jnp.stack(xs))
+            self.stats.dispatches += 1
+            self.stats.executed += n
+            for i, (ticket, cfg, x, hw) in enumerate(items):
+                y = np.asarray(ys[i, :, : x.shape[-1]])
+                if hw is not None:
+                    H, W = hw
+                    y = y[:, : H * W].reshape((-1, H, W))
+                    y = y[0] if y.shape[0] == 1 else y
+                out[ticket] = y
+        self.timings["flush_s"] = time.perf_counter() - t0
+        self._results.update(out)
+        while len(self._results) > self.max_retained_results:
+            self._results.popitem(last=False)
+        return out
+
+    def run_many(self, requests: Sequence[FleetRequest]) -> List[np.ndarray]:
+        """submit() + flush() convenience; outputs in request order (and
+        released from retention, so nothing stays behind).  Consumes the
+        flush() return value directly -- correct for any batch size, even
+        beyond ``max_retained_results``."""
+        tickets = [self.submit(r) for r in requests]
+        outs = self.flush()
+        for t in tickets:
+            self.discard(t)
+        return [outs[t] for t in tickets]

@@ -1,3 +1,4 @@
 from repro.serve.engine import ServeConfig, ServeEngine, SlotServer
+from repro.serve.fleet_frontend import FleetFrontend, ImageJob
 
-__all__ = ["ServeConfig", "ServeEngine", "SlotServer"]
+__all__ = ["ServeConfig", "ServeEngine", "SlotServer", "FleetFrontend", "ImageJob"]

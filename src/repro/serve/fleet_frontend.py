@@ -1,0 +1,123 @@
+"""Serving front-end for the Pixie fleet: an image-processing service.
+
+The LM serving stack (``serve/engine.py``) batches token requests into one
+decode step; this is the same pattern for the VCGRA overlay: clients ask
+for *named image operations* ("sobel_x on this frame"), the front-end
+queues them, and each service tick drains the queue through
+:class:`repro.runtime.fleet.PixieFleet` -- one vmapped overlay dispatch
+for every distinct grid, regardless of how many different applications
+are in flight.
+
+Deliberately transport-agnostic (no HTTP server in the core library): an
+RPC layer would call :meth:`submit` on arrival and :meth:`tick` on a
+timer, exactly like ``SlotServer.tick``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import applications as app_lib
+from repro.core.dfg import DFG
+from repro.core.grid import GridSpec
+from repro.runtime.fleet import FleetRequest, PixieFleet
+
+
+@dataclasses.dataclass
+class ImageJob:
+    """A completed unit of service work (returned by ``tick``)."""
+
+    ticket: int
+    app: str
+    output: np.ndarray
+    latency_s: float
+
+
+class FleetFrontend:
+    """Queue + drain service loop over a :class:`PixieFleet`.
+
+    >>> svc = FleetFrontend()
+    >>> t = svc.submit("sobel_x", img)
+    >>> done = svc.tick()           # drains the queue in one dispatch
+    >>> edge = svc.take(t)
+    """
+
+    def __init__(
+        self,
+        fleet: Optional[PixieFleet] = None,
+        registry: Optional[Dict[str, object]] = None,
+        max_done: int = 1024,
+    ):
+        self.fleet = fleet or PixieFleet()
+        # Name -> DFG factory; defaults to the paper's application library.
+        self.registry = dict(registry) if registry is not None else dict(app_lib.ALL_APPS)
+        self._arrivals: Dict[int, Tuple[str, float]] = {}
+        # Bounded: clients that read outputs from tick()'s ImageJob list and
+        # never take() must not leak; oldest unredeemed jobs are evicted.
+        self._done: "OrderedDict[int, ImageJob]" = OrderedDict()
+        self.max_done = int(max_done)
+
+    def available_apps(self) -> List[str]:
+        return sorted(self.registry)
+
+    def submit(
+        self,
+        app: Union[str, DFG],
+        image: np.ndarray,
+        grid: Optional[GridSpec] = None,
+    ) -> int:
+        """Enqueue one frame; returns a ticket for :meth:`take`."""
+        if isinstance(app, str):
+            if app not in self.registry:
+                raise KeyError(
+                    f"unknown app {app!r}; known: {self.available_apps()}"
+                )
+            name, dfg = app, self.registry[app]()
+        else:
+            name, dfg = app.name, app
+        ticket = self.fleet.submit(FleetRequest(app=dfg, image=image, grid=grid))
+        self._arrivals[ticket] = (name, time.perf_counter())
+        return ticket
+
+    def tick(self) -> List[ImageJob]:
+        """Drain the queue: one batched dispatch per grid group."""
+        outs = self.fleet.flush()
+        now = time.perf_counter()
+        jobs = []
+        for ticket, output in outs.items():
+            self.fleet.discard(ticket)  # the job owns the output now
+            name, t_arrival = self._arrivals.pop(ticket)
+            job = ImageJob(ticket, name, output, now - t_arrival)
+            self._done[ticket] = job
+            jobs.append(job)
+        while len(self._done) > self.max_done:
+            self._done.popitem(last=False)
+        return jobs
+
+    def take(self, ticket: int) -> np.ndarray:
+        """Redeem a ticket (after the tick that served it)."""
+        return self._done.pop(ticket).output
+
+    def process(self, app: Union[str, DFG], image: np.ndarray) -> np.ndarray:
+        """Synchronous single-frame convenience (still goes through the
+        batched path, so repeat calls reuse the compiled overlay)."""
+        t = self.submit(app, image)
+        self.tick()
+        return self.take(t)
+
+    def process_batch(
+        self, requests: Sequence[Tuple[Union[str, DFG], np.ndarray]]
+    ) -> List[np.ndarray]:
+        """Many (app, image) pairs in one dispatch; outputs in order."""
+        tickets = [self.submit(app, image) for app, image in requests]
+        self.tick()
+        return [self.take(t) for t in tickets]
+
+    @property
+    def stats(self):
+        return self.fleet.stats

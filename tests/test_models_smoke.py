@@ -12,6 +12,9 @@ from repro.models import LM
 from repro.optim import AdamWConfig, init_opt_state
 from repro.train import train_step
 
+# Long-running suite: excluded from tier-1 (-m "not slow"), run nightly.
+pytestmark = pytest.mark.slow
+
 ALL = sorted(ARCHS)
 
 

@@ -10,6 +10,9 @@ from repro.configs import ARCHS, reduced
 from repro.models import LM
 from repro.serve import ServeConfig, ServeEngine, SlotServer
 
+# Long-running suite: excluded from tier-1 (-m "not slow"), run nightly.
+pytestmark = pytest.mark.slow
+
 
 def _lm(name="gemma-2b"):
     cfg = reduced(ARCHS[name])

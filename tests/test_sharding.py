@@ -11,6 +11,9 @@ from repro.configs import ARCHS, reduced
 from repro.models import LM
 from repro.parallel.sharding import choose_attn_mode, make_plan
 
+# Long-running suite: excluded from tier-1 (-m "not slow"), run nightly.
+pytestmark = pytest.mark.slow
+
 MESH_16x16 = None  # built lazily if enough devices; CPU tests use 1x1
 
 

@@ -12,6 +12,9 @@ from repro.models import LM
 from repro.optim import AdamWConfig, init_opt_state, init_error_state
 from repro.train import LoopConfig, train_loop, train_step
 
+# Long-running suite: excluded from tier-1 (-m "not slow"), run nightly.
+pytestmark = pytest.mark.slow
+
 
 def _setup(vocab=256):
     cfg = reduced(ARCHS["gemma-2b"])
