@@ -8,16 +8,30 @@
 
 Prints ``name,us_per_call,derived`` CSV rows at the end for machine
 consumption, after the human-readable tables.
+
+``--check`` additionally enforces the fleet-throughput floors (batched
+dispatch and fused e2e both >= 2x) and writes the fleet BENCH JSON to the
+stable ``artifacts/bench/BENCH_fleet.json`` path so CI runs accumulate a
+throughput trajectory under one artifact name.
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
+BENCH_FLEET_JSON = "artifacts/bench/BENCH_fleet.json"
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--check", action="store_true",
+                   help="enforce fleet speedup floors and write the BENCH "
+                        f"JSON to {BENCH_FLEET_JSON}")
+    args = p.parse_args(argv)
+
     from benchmarks import (
         compile_time, fleet_throughput, resource_table, roofline_table,
         sobel_throughput,
@@ -90,13 +104,22 @@ def main() -> None:
     print("Benchmark 5: fleet throughput (multi-tenant batched overlay)")
     print("=" * 72)
     try:
-        r = fleet_throughput.main(["--smoke"])
+        fleet_args = ["--smoke"]
+        if args.check:
+            fleet_args += ["--check", "--out", BENCH_FLEET_JSON]
+        r = fleet_throughput.main(fleet_args)
         csv_rows.append((
             "fleet/batched_vs_sequential",
             f"{1e6 / r['batched_apps_per_s']:.1f}",
             f"speedup={r['speedup']:.2f};apps={r['n_apps']}",
         ))
-    except Exception as e:
+        csv_rows.append((
+            "fleet/fused_vs_unfused_e2e",
+            f"{1e6 / r['fused_e2e_apps_per_s']:.1f}",
+            f"speedup_e2e={r['speedup_e2e']:.2f};"
+            f"pack_fraction={r['pack_fraction_fused']:.3f}",
+        ))
+    except (Exception, SystemExit) as e:
         traceback.print_exc()
         failures.append(("fleet_throughput", e))
 

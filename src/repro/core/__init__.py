@@ -21,6 +21,7 @@ JAX system:
 from repro.core.bitstream import VCGRAConfig, assemble
 from repro.core.dfg import DFG, InRef, NodeRef, reference_eval
 from repro.core.grid import GridSpec, for_dfg, paper_4x4, rectangular, sobel_grid
+from repro.core.ingest import IngestError, IngestPlan, plan_for, tap_offsets
 from repro.core.ops import Op
 from repro.core.pixie import Pixie, map_app, sobel_pixie
 from repro.core.place import Placement, PlacementError, level_demand, place
@@ -30,6 +31,7 @@ from repro.core.synthesis import SOBEL_SOURCE, synthesize
 __all__ = [
     "DFG", "InRef", "NodeRef", "reference_eval",
     "GridSpec", "for_dfg", "paper_4x4", "rectangular", "sobel_grid",
+    "IngestError", "IngestPlan", "plan_for", "tap_offsets",
     "Op", "Pixie", "map_app", "sobel_pixie",
     "Placement", "PlacementError", "level_demand", "place",
     "Routing", "RoutingError", "route",

@@ -162,9 +162,14 @@ ALL_APPS = {
 def stencil_inputs(image: jnp.ndarray, radius: int = 1) -> Dict[str, jnp.ndarray]:
     """Produce the shifted pixel views feeding the top memory VC.
 
-    The hardware would stream these from line buffers; on TPU the analogous
-    operation is a zero-padded shift per tap.  ``image``: [H, W] ->
-    each tap: [H*W] flattened, tap (dj, di) holding image[y+dj, x+di].
+    The hardware would stream these from line buffers; here it is a
+    zero-padded shift per tap.  ``image``: [H, W] -> each tap: [H*W]
+    flattened, tap (dj, di) holding image[y+dj, x+di].
+
+    This host-side path is the *oracle* for the fused device-side ingest
+    (``core/ingest.py`` + ``interpreter.form_tap_bank``), which forms the
+    same taps inside the jitted overlay dispatch; tier-1 asserts they are
+    bitwise identical.  Production paths should prefer the fused one.
     """
     img = jnp.asarray(image)
     H, W = img.shape
@@ -180,21 +185,14 @@ def stencil_inputs(image: jnp.ndarray, radius: int = 1) -> Dict[str, jnp.ndarray
 def conv2d_reference(
     image: np.ndarray, kernel: Sequence[Sequence[float]], divisor: float = 1.0
 ) -> np.ndarray:
-    """Pure-numpy oracle of Algorithm 1 (zero-padded 3x3 convolution in the
-    paper's index convention: sum k[c+j][c+i] * pixel[pos-j][pos-i])."""
+    """Pure-numpy oracle of Algorithm 1: zero-padded 3x3 convolution in the
+    tap convention ``sum kernel[j+1][i+1] * image[y+j, x+i]`` used
+    consistently by this oracle and the DFG builder (for the paper's
+    symmetric kernels this equals correlation with the flipped kernel)."""
     img = np.asarray(image)
     H, W = img.shape
     pad = np.pad(img, 1)
-    out = np.zeros_like(img)
     kq = np.asarray(kernel, dtype=img.dtype)
-    for j in (-1, 0, 1):
-        for i in (-1, 0, 1):
-            # pixel[pos-j][pos-i] with kernel[c+j][c+i]; our taps use
-            # image[y+dj, x+di], so dj=-j, di=-i -- for the symmetric
-            # kernels used here this equals correlation with the flipped
-            # kernel; we keep the tap convention kernel[j+1][i+1]*img[y+j,x+i]
-            # consistently in both oracle and DFG builder.
-            pass
     acc = np.zeros((H, W), dtype=np.result_type(img.dtype, kq.dtype))
     for r, dj in enumerate((-1, 0, 1)):
         for c, di in enumerate((-1, 0, 1)):

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.grid import GridSpec
+from repro.core.ingest import IngestError, IngestPlan, plan_for
 from repro.core.place import Placement
 from repro.core.route import Routing
 
@@ -38,6 +39,10 @@ class VCGRAConfig:
     # Stable identity set by caching layers (runtime/fleet.py): the DFG
     # structural hash + grid.  None for configs assembled outside a cache.
     cache_key: Optional[str] = None
+    # How each memory-VC channel is produced from a raw image frame
+    # (core/ingest.py); None when the app is not image-feedable (a channel
+    # is neither a stencil tap nor a const) and needs named inputs.
+    ingest: Optional[IngestPlan] = None
 
     # -- conventional-path form (settings registers as device arrays) ------
 
@@ -127,6 +132,7 @@ class VCGRAConfig:
                 "out_sel": self.out_sel.tolist(),
                 "input_order": list(self.input_order),
                 "const_values": self.const_values,
+                "ingest": self.ingest.to_dict() if self.ingest else None,
             }
         )
 
@@ -141,6 +147,7 @@ class VCGRAConfig:
             out_sel=np.asarray(d["out_sel"], dtype=np.int32),
             input_order=tuple(d["input_order"]),
             const_values={k: float(v) for k, v in d["const_values"].items()},
+            ingest=IngestPlan.from_dict(d["ingest"]) if d.get("ingest") else None,
         )
 
 
@@ -152,12 +159,19 @@ def assemble(placement: Placement, routing: Routing, grid: GridSpec) -> VCGRACon
         for slot, c in enumerate(cells):
             ops[slot] = int(c.op)
         opcodes.append(ops)
+    input_order = tuple(placement.dfg.inputs)
+    const_values = dict(placement.dfg.const_values)
+    try:
+        ingest = plan_for(input_order, const_values, grid.num_inputs)
+    except IngestError:
+        ingest = None  # not image-feedable; unfused named-channel path only
     return VCGRAConfig(
         app_name=placement.dfg.name,
         grid_name=grid.name,
         opcodes=opcodes,
         selects=[s.copy() for s in routing.sel],
         out_sel=routing.out_sel.copy(),
-        input_order=tuple(placement.dfg.inputs),
-        const_values=dict(placement.dfg.const_values),
+        input_order=input_order,
+        const_values=const_values,
+        ingest=ingest,
     )

@@ -1,0 +1,160 @@
+"""IngestPlan: how each memory-VC channel is *produced* from a raw frame.
+
+The paper's hardware streams stencil taps from line buffers straight into
+the top memory-interface VC; the software analogue used to be a two-step
+host-side path (``applications.stencil_inputs`` + ``interpreter.pack_inputs``)
+issuing ~20 small un-jitted device ops per frame.  This module records, at
+map time, the *production rule* for every channel of an application:
+
+  tap (dj, di)   gathered from the raw image by a shifted slice
+                 (the line-buffer read)
+  const          a burned-in coefficient value
+  zero           an unused (padding) channel of the grid's memory VC
+
+so the whole ingest can move inside the jitted overlay dispatch
+(``interpreter.make_fused_overlay_fn``).  Crucially the plan compiles to
+**runtime settings arrays**, not trace-time structure: the fused executable
+forms one tap bank per frame from trace-time-constant offsets (static
+slices -- see DESIGN.md "Fused device-side ingest"), and each channel
+*selects* its producer from that bank exactly like a VC mux select.  Any
+application mapped on a grid therefore shares one executable, fused or not.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def tap_offsets(radius: int) -> Tuple[Tuple[int, int], ...]:
+    """Canonical tap-bank layout for a stencil radius: all (dj, di) offsets
+    in row-major order.  Every plan built for the same radius indexes the
+    same bank, which is what lets N different apps stack into one fused
+    dispatch."""
+    r = int(radius)
+    return tuple(
+        (dj, di) for dj in range(-r, r + 1) for di in range(-r, r + 1)
+    )
+
+
+def _tap_lookup(radius: int) -> Dict[str, int]:
+    # Inverse of applications.tap_name without importing it (applications
+    # imports nothing from here, but keep the dependency one-way anyway).
+    return {
+        f"p{dj + 1}{di + 1}": t
+        for t, (dj, di) in enumerate(tap_offsets(radius))
+    }
+
+
+class IngestError(ValueError):
+    """A channel cannot be produced from a raw image (not a tap, not a
+    const) -- the app needs the unfused named-channel path."""
+
+
+@dataclasses.dataclass
+class IngestPlan:
+    """Channel-production settings for one app on one grid.
+
+    ``tap_sel[c]``: index into the fused tap bank for channel ``c``.  The
+    bank holds ``num_taps`` shifted views plus one trailing zero row;
+    channels selecting the zero row take ``const_vals[c]`` verbatim (0 for
+    grid-padding channels).  Both arrays span the *grid's* full memory-VC
+    width, so the fused path needs no separate ``pad_channels`` step.
+    """
+
+    radius: int
+    tap_sel: np.ndarray      # int32 [num_inputs]
+    const_vals: np.ndarray   # float64 [num_inputs]; cast to grid dtype at use
+    channel_names: Tuple[str, ...] = ()
+
+    @property
+    def num_taps(self) -> int:
+        return (2 * self.radius + 1) ** 2
+
+    @property
+    def zero_row(self) -> int:
+        return self.num_taps
+
+    def to_jax(self, dtype):
+        return jnp.asarray(self.tap_sel), jnp.asarray(self.const_vals, dtype)
+
+    @staticmethod
+    def stack(plans: Sequence["IngestPlan"], dtype):
+        """Stack N same-radius plans into batched settings arrays
+        ``(tap_sel: [N, C], const_vals: [N, C])`` -- the ingest analogue of
+        ``VCGRAConfig.stack``."""
+        if not plans:
+            raise ValueError("cannot stack an empty plan list")
+        r0, w0 = plans[0].radius, plans[0].tap_sel.shape[0]
+        for p in plans[1:]:
+            if p.radius != r0 or p.tap_sel.shape[0] != w0:
+                raise ValueError(
+                    f"ingest plan (radius={p.radius}, width={p.tap_sel.shape[0]}) "
+                    f"does not match the stack's (radius={r0}, width={w0})"
+                )
+        return (
+            jnp.stack([jnp.asarray(p.tap_sel) for p in plans]),
+            jnp.stack([jnp.asarray(p.const_vals, dtype) for p in plans]),
+        )
+
+    # -- (de)serialization (rides along inside VCGRAConfig.to_json) ---------
+
+    def to_dict(self) -> dict:
+        return {
+            "radius": self.radius,
+            "tap_sel": self.tap_sel.tolist(),
+            "const_vals": self.const_vals.tolist(),
+            "channel_names": list(self.channel_names),
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "IngestPlan":
+        return IngestPlan(
+            radius=int(d["radius"]),
+            tap_sel=np.asarray(d["tap_sel"], dtype=np.int32),
+            const_vals=np.asarray(d["const_vals"], dtype=np.float64),
+            channel_names=tuple(d.get("channel_names", ())),
+        )
+
+
+def plan_for(
+    input_order: Sequence[str],
+    const_values: Dict[str, float],
+    num_inputs: int,
+    radius: int = 1,
+) -> IngestPlan:
+    """Build the production plan for an image-fed application.
+
+    Mirrors ``pack_inputs``'s precedence exactly: a name that is a stencil
+    tap is fed from the image (even if it also has a const default), a name
+    with a const default is burned in, anything else raises
+    :class:`IngestError` (the app needs named channels, not a frame).
+    Channels beyond ``len(input_order)`` up to the grid's memory-VC width
+    are zero rows.
+    """
+    if len(input_order) > num_inputs:
+        raise ValueError(
+            f"app uses {len(input_order)} input channels, grid has {num_inputs}"
+        )
+    lookup = _tap_lookup(radius)
+    zero = len(lookup)
+    tap_sel = np.full((num_inputs,), zero, dtype=np.int32)
+    const_vals = np.zeros((num_inputs,), dtype=np.float64)
+    for c, name in enumerate(input_order):
+        if name in lookup:
+            tap_sel[c] = lookup[name]
+        elif name in const_values:
+            const_vals[c] = float(const_values[name])
+        else:
+            raise IngestError(
+                f"channel {name!r} is neither a radius-{radius} stencil tap "
+                f"nor a const; it cannot be produced from a raw image"
+            )
+    names = tuple(input_order) + ("<pad>",) * (num_inputs - len(input_order))
+    return IngestPlan(
+        radius=radius, tap_sel=tap_sel, const_vals=const_vals,
+        channel_names=names,
+    )

@@ -22,7 +22,7 @@ both of which the parameterized path (``specialize.py``) folds away.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,28 +30,42 @@ import jax.numpy as jnp
 from repro.core import ops as pe_ops
 from repro.core.bitstream import VCGRAConfig
 from repro.core.grid import GridSpec
+from repro.core.ingest import IngestPlan, tap_offsets
 
 ConfigArrays = Tuple[Tuple[jnp.ndarray, ...], Tuple[jnp.ndarray, ...], jnp.ndarray]
+IngestArrays = Tuple[jnp.ndarray, jnp.ndarray]  # (tap_sel, const_vals)
 
 
 def pack_inputs(
-    config: VCGRAConfig, inputs: Dict[str, jnp.ndarray], dtype
+    config: VCGRAConfig,
+    inputs: Dict[str, jnp.ndarray],
+    dtype,
+    batch_shape: Optional[Tuple[int, ...]] = None,
 ) -> jnp.ndarray:
     """Order named inputs into the memory-interface channel layout
-    ``[num_inputs, batch]``; missing names fall back to const defaults."""
+    ``[num_inputs, batch]``; missing names fall back to const defaults.
+
+    When *every* channel is const-valued the batch shape cannot be
+    inferred from the inputs -- pass ``batch_shape`` explicitly, otherwise
+    this raises instead of silently producing a scalar ``()`` batch.
+    """
     cols = []
-    batch_shape = None
     for name in config.input_order:
         if name in inputs:
             v = jnp.asarray(inputs[name], dtype=dtype)
-            batch_shape = v.shape
+            if batch_shape is None:
+                batch_shape = v.shape
             cols.append(v)
         elif name in config.const_values:
             cols.append(None)  # fill after batch shape known
         else:
             raise KeyError(f"missing input {name!r}")
     if batch_shape is None:
-        batch_shape = ()
+        raise ValueError(
+            f"every channel of {config.app_name!r} is const-valued, so the "
+            "pixel batch shape cannot be inferred; pass batch_shape= "
+            "explicitly (e.g. batch_shape=(n,))"
+        )
     cols = [
         jnp.full(batch_shape, config.const_values[name], dtype=dtype)
         if c is None
@@ -138,6 +152,119 @@ def make_batched_overlay_fn(grid: GridSpec):
     compiles exactly once per grid.
     """
     return jax.jit(partial(batched_overlay_step, grid))
+
+
+# -- fused device-side ingest (line buffers inside the dispatch) --------------
+
+
+def form_tap_bank(images: jnp.ndarray, radius: int, dtype) -> jnp.ndarray:
+    """Line-buffer formation: raw frames -> the stencil tap bank.
+
+    ``images``: [N, H, W] -> bank [N, T+1, H*W] where row ``t`` holds tap
+    ``tap_offsets(radius)[t]`` (zero-padded shift, exactly
+    ``applications.stencil_inputs``) and the trailing row is zeros (the
+    const/padding producer).  The offsets are trace-time constants, so each
+    tap is a *static* slice of one padded buffer -- the whole bank lowers
+    to cheap views, no batched-indices gather (see DESIGN.md).
+    """
+    imgs = jnp.asarray(images, dtype)
+    n, H, W = imgs.shape
+    r = radius
+    padded = jnp.pad(imgs, ((0, 0), (r, r), (r, r)))
+    rows = [
+        padded[:, r + dj : r + dj + H, r + di : r + di + W].reshape(n, H * W)
+        for dj, di in tap_offsets(radius)
+    ]
+    rows.append(jnp.zeros((n, H * W), dtype))
+    return jnp.stack(rows, axis=1)
+
+
+def apply_ingest(bank: jnp.ndarray, ingest: IngestArrays) -> jnp.ndarray:
+    """Produce the memory-VC channels of ONE app from its tap bank.
+
+    ``bank``: [T+1, pixels]; ``ingest``: (tap_sel [C], const_vals [C]).
+    Channels selecting the zero row take their const value verbatim (0 for
+    grid-padding channels), so the result needs no further ``pad_channels``.
+    """
+    tap_sel, const_vals = ingest
+    zero_row = bank.shape[0] - 1
+    gathered = jnp.take(bank, tap_sel, axis=0)
+    return jnp.where((tap_sel == zero_row)[:, None], const_vals[:, None], gathered)
+
+
+def fused_overlay_step(
+    grid: GridSpec, radius: int, config: ConfigArrays,
+    ingest: IngestArrays, image: jnp.ndarray,
+) -> jnp.ndarray:
+    """pack + dispatch fused: one raw [H, W] frame -> [num_outputs, H*W]
+    inside a single executable.  The ingest arrays are runtime settings
+    (like the VC mux selects), so any app mapped on the grid reuses the
+    same compiled function."""
+    bank = form_tap_bank(image[None], radius, grid.dtype)[0]
+    x = apply_ingest(bank, ingest)
+    return overlay_step(grid, config, x)
+
+
+def make_fused_overlay_fn(grid: GridSpec, radius: int = 1):
+    """Build the jit-once *fused-ingest* overlay executor for a grid.
+
+    Returns ``fn(config_arrays, ingest_arrays, image) -> y`` with
+    ``image: [H, W] -> y: [num_outputs, H*W]``.  Like
+    :func:`make_overlay_fn` the executable depends only on the grid
+    structure (plus the stencil radius and frame shape): tap offsets are
+    trace-time constants, tap *selection* is runtime data."""
+    return jax.jit(partial(fused_overlay_step, grid, radius))
+
+
+def batched_fused_overlay_step(
+    grid: GridSpec, radius: int, configs: ConfigArrays,
+    ingests: IngestArrays, images: jnp.ndarray,
+) -> jnp.ndarray:
+    """N apps on N raw frames in ONE dispatch, line buffers included.
+
+    ``images``: [N, H, W]; ``ingests``: stacked plan arrays
+    (``IngestPlan.stack``), tap_sel [N, C] / const_vals [N, C].  The
+    per-app tap selection uses the same flat-bank offset trick as the VC
+    muxes in :func:`batched_overlay_step`: one plain gather over a
+    [N*(T+1), pixels] bank, never a batched-indices gather.
+    """
+    tap_sel, const_vals = ingests
+    bank = form_tap_bank(images, radius, grid.dtype)
+    n, t1, pixels = bank.shape
+    flat = bank.reshape(n * t1, pixels)
+    offs = (jnp.arange(n, dtype=tap_sel.dtype) * t1)[:, None]
+    gathered = jnp.take(flat, (tap_sel + offs).reshape(-1), axis=0)
+    gathered = gathered.reshape(n, -1, pixels)
+    xs = jnp.where((tap_sel == t1 - 1)[..., None], const_vals[..., None], gathered)
+    return batched_overlay_step(grid, configs, xs)
+
+
+def make_batched_fused_overlay_fn(grid: GridSpec, radius: int = 1):
+    """Build the jit-once *multi-tenant fused-ingest* overlay executor.
+
+    Returns ``fn(stacked_configs, stacked_ingests, images) -> ys`` with
+    ``images: [N, H, W] -> ys: [N, num_outputs, H*W]``.  One executable
+    per (grid, radius, N, H, W); a fleet that pads N and the frame canvas
+    to fixed tiles compiles exactly once per grid."""
+    return jax.jit(partial(batched_fused_overlay_step, grid, radius))
+
+
+def run_app_fused(
+    grid: GridSpec,
+    config: VCGRAConfig,
+    image: jnp.ndarray,
+    fused_fn=None,
+) -> jnp.ndarray:
+    """Convenience one-shot fused execution: raw frame in, [num_outputs,
+    H*W] out.  Requires ``config.ingest`` (set by ``assemble`` whenever the
+    app is image-feedable)."""
+    if config.ingest is None:
+        raise ValueError(
+            f"app {config.app_name!r} has no ingest plan (a channel is "
+            "neither a stencil tap nor a const); use the named-channel path"
+        )
+    fn = fused_fn or make_fused_overlay_fn(grid, config.ingest.radius)
+    return fn(config.to_jax(), config.ingest.to_jax(grid.dtype), jnp.asarray(image))
 
 
 def pad_channels(x: jnp.ndarray, num_inputs: int) -> jnp.ndarray:

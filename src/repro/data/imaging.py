@@ -22,7 +22,7 @@ import numpy as np
 from repro.core import applications as apps
 from repro.core import for_dfg, map_app
 from repro.core.grid import GridSpec, rectangular
-from repro.core.interpreter import make_overlay_fn, pack_inputs
+from repro.core.interpreter import make_fused_overlay_fn, make_overlay_fn, pack_inputs
 
 
 def synthetic_images(batch: int, hw, seed: int = 0) -> np.ndarray:
@@ -56,7 +56,12 @@ class PixiePreprocessor:
         self.grid: GridSpec = rectangular(
             "preproc", n_in, depth, width, num_outputs=1, float_pe=self.float_pe
         )
+        # Fused ingest: line-buffer formation + pack + dispatch are ONE
+        # jitted executable; reconfigure swaps settings (config + ingest
+        # plan arrays), never recompiles.  The unfused overlay stays
+        # available for apps without an ingest plan.
         self.overlay = make_overlay_fn(self.grid)
+        self.fused_overlay = make_fused_overlay_fn(self.grid)
         self.configs = {name: map_app(g, self.grid) for name, g in dfgs.items()}
         self.active = self.filters[0]
 
@@ -69,6 +74,11 @@ class PixiePreprocessor:
     def __call__(self, image: jnp.ndarray) -> jnp.ndarray:
         """[H, W] -> [H, W] filtered, through the overlay."""
         cfg = self.configs[self.active]
+        if cfg.ingest is not None and cfg.ingest.radius == 1:
+            y = self.fused_overlay(
+                cfg.to_jax(), cfg.ingest.to_jax(self.grid.dtype), image
+            )
+            return y[0].reshape(image.shape)
         taps = apps.stencil_inputs(image)
         feed = {k: v for k, v in taps.items() if k in cfg.input_order}
         x = pack_inputs(cfg, feed, self.grid.dtype)

@@ -2,7 +2,10 @@
 
 Handles batch padding to lane-aligned blocks, image packing/unpacking, and
 exposes the same (grid, config, inputs) contract as the core interpreter so
-the kernel drops into the Pixie facade transparently.
+the kernel drops into the Pixie facade transparently.  Image entry points
+use the fused device-side ingest (``core/ingest.py``): the stencil tap
+bank + channel production run as ONE jitted function instead of ~20
+host-issued shift/stack ops per frame.
 """
 
 from __future__ import annotations
@@ -16,13 +19,25 @@ import jax.numpy as jnp
 from repro.core import applications as apps
 from repro.core.bitstream import VCGRAConfig
 from repro.core.grid import GridSpec
-from repro.core.interpreter import pack_inputs
+from repro.core.interpreter import apply_ingest, form_tap_bank, pack_inputs
 from repro.kernels.vcgra.vcgra_kernel import (
     LANE,
     _pack_settings,
     vcgra_conventional,
     vcgra_specialized,
 )
+
+
+@functools.lru_cache(maxsize=None)
+def _ingest_fn(radius: int, dtype):
+    """Jit-once fused frame ingest: [H, W] raw image -> [C, H*W] channels
+    (tap offsets trace-time constants, plan arrays runtime settings)."""
+
+    def ingest(tap_sel, const_vals, image):
+        bank = form_tap_bank(image[None], radius, dtype)[0]
+        return apply_ingest(bank, (tap_sel, const_vals))
+
+    return jax.jit(ingest)
 
 
 def _pad_batch(x: jnp.ndarray, block_n: int):
@@ -71,11 +86,22 @@ def vcgra_apply_image(
     block_n: int = 1024,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """Stencil-app convenience: [H, W] image -> [H, W] (or [K, H, W]) output."""
+    """Stencil-app convenience: [H, W] image -> [H, W] (or [K, H, W]) output.
+
+    Takes the fused ingest path whenever the config carries an
+    :class:`~repro.core.ingest.IngestPlan` (one jitted tap-bank + select
+    per frame); falls back to the host-side two-step oracle otherwise.
+    """
     H, W = image.shape
-    taps = apps.stencil_inputs(image)
-    feed = {k: v for k, v in taps.items() if k in config.input_order}
-    x = pack_inputs(config, feed, grid.dtype)
+    if config.ingest is not None:
+        plan = config.ingest
+        x = _ingest_fn(plan.radius, grid.dtype)(
+            *plan.to_jax(grid.dtype), jnp.asarray(image)
+        )
+    else:
+        taps = apps.stencil_inputs(image)
+        feed = {k: v for k, v in taps.items() if k in config.input_order}
+        x = pack_inputs(config, feed, grid.dtype)
     y = vcgra_apply(grid, config, x, mode=mode, block_n=block_n, interpret=interpret)
     y = y.reshape((-1, H, W))
     return y[0] if y.shape[0] == 1 else y

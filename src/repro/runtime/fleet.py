@@ -15,20 +15,31 @@ Scheduling model:
   its pixel inputs (named channels or a whole image);
 * requests are grouped by :class:`GridSpec` -- only same-structure overlays
   share an executable;
-* each group is padded to fixed (N, batch) tiles so repeated flushes hit
-  the same compiled executable (no shape-driven recompiles);
+* image requests take the **fused-ingest** path: the raw frame is kept at
+  submit time and line-buffer formation (stencil tap slices) happens
+  *inside* the batched dispatch (``interpreter.make_batched_fused_overlay_fn``)
+  -- pack + dispatch + unpack are one executable, with per-app
+  :class:`repro.core.ingest.IngestPlan` settings selecting each channel's
+  producer; named-channel requests keep the host-packed path;
+* each group is padded to fixed tiles -- the app axis to ``batch_tile``,
+  the pixel axis (frame canvas for fused, flat batch for unfused) to
+  power-of-two buckets -- so repeated flushes hit the same compiled
+  executable (no shape-driven recompiles);
 * mapped configs are cached by DFG structural hash: a repeat tenant costs
   zero place/route work;
 * compiled batched overlays are cached per grid in a small LRU.
 
 All padding is exact: padded app slots replay an already-valid config on
-zero inputs and are discarded, padded pixels are sliced off, so fleet
-outputs are bitwise identical to sequential `Pixie` runs.
+zero inputs and are discarded; padded pixels (for fused requests: the
+zero canvas right/below the frame, which taps read exactly like
+``stencil_inputs``'s zero border) are sliced off -- so fleet outputs are
+bitwise identical to sequential `Pixie` runs.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -42,6 +53,7 @@ from repro.core import interpreter
 from repro.core.bitstream import VCGRAConfig
 from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
+from repro.core.ingest import IngestPlan
 from repro.core.pixie import map_app
 
 
@@ -101,6 +113,7 @@ class FleetStats:
     submitted: int = 0
     executed: int = 0
     dispatches: int = 0          # batched overlay launches
+    fused_dispatches: int = 0    # of which took the fused-ingest path
     padded_app_slots: int = 0    # wasted N-axis slots from tile rounding
     map_calls: int = 0           # place/route runs (config-cache misses)
     config_cache_hits: int = 0
@@ -110,6 +123,17 @@ class FleetStats:
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Prepared:
+    """A submit-time-validated work item awaiting flush."""
+
+    grid: GridSpec
+    cfg: VCGRAConfig
+    kind: str                    # "image" (fused ingest) | "channels"
+    payload: Any                 # np [H, W] raw frame | jnp [C, batch]
+    hw: Optional[Tuple[int, int]]
 
 
 def _round_up(n: int, tile: int) -> int:
@@ -146,6 +170,10 @@ class PixieFleet:
         self.default_grid = default_grid or gridlib.sobel_grid()
         self.batch_tile = int(batch_tile)
         self.min_pixel_batch = int(min_pixel_batch)
+        # Fused frame canvases bucket H and W separately; the floor keeps
+        # the same ~min_pixel_batch pixels per tile as the unfused path.
+        self.min_image_side = max(1, int(math.isqrt(self.min_pixel_batch)))
+        # Keyed by GridSpec (unfused) or (GridSpec, "fused", radius).
         self._overlays = LRUCache(max_overlays)
         self._configs = LRUCache(max_configs)
         # Stacked settings banks: a repeat flush of the same tenant set
@@ -158,7 +186,10 @@ class PixieFleet:
         self._results: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.max_retained_results = int(max_retained_results)
         self._next_ticket = 0
-        self.timings: Dict[str, float] = {}
+        # pack_s accumulates host-side input preparation (submit time);
+        # dispatch_s accumulates time inside overlay executions; flush_s is
+        # the wall time of the most recent flush.
+        self.timings: Dict[str, float] = {"pack_s": 0.0, "dispatch_s": 0.0}
 
     # -- caches ---------------------------------------------------------------
 
@@ -202,17 +233,40 @@ class PixieFleet:
         self._overlays.put(grid, fn)
         return fn
 
+    def fused_overlay_for(self, grid: GridSpec, radius: int) -> Callable:
+        """The jitted batched *fused-ingest* executor for ``grid``: raw
+        frames in, line buffers formed inside the dispatch.  Built once per
+        (grid, stencil radius); ingest plans are runtime settings, so every
+        app shares it."""
+        key = (grid, "fused", radius)
+        fn = self._overlays.get(key)
+        if fn is not None:
+            self.stats.overlay_cache_hits += 1
+            return fn
+        fn = interpreter.make_batched_fused_overlay_fn(grid, radius)
+        self.stats.overlay_builds += 1
+        self._overlays.put(key, fn)
+        return fn
+
     def overlay_executable_count(self, grid: Optional[GridSpec] = None) -> int:
-        """Number of XLA executables compiled for a grid's batched overlay
-        (one per distinct padded tile shape; 1 when tiling is doing its
-        job).  Returns -1 when the running jax has no jit cache introspection
-        (``_cache_size`` is not public API); ``stats.overlay_builds`` is the
-        version-stable counter."""
-        fn = self._overlays._d.get(grid or self.default_grid)
-        if fn is None:
+        """Number of XLA executables compiled for a grid's batched overlays
+        (fused and unfused combined; one per distinct padded tile shape, so
+        1 when one path is in use and tiling is doing its job).  Returns -1
+        when the running jax has no jit cache introspection (``_cache_size``
+        is not public API); ``stats.overlay_builds`` is the version-stable
+        counter."""
+        grid = grid or self.default_grid
+        counts = []
+        for key, fn in self._overlays._d.items():
+            key_grid = key[0] if isinstance(key, tuple) else key
+            if key_grid == grid:
+                sizer = getattr(fn, "_cache_size", None)
+                counts.append(int(sizer()) if callable(sizer) else -1)
+        if not counts:
             return 0
-        sizer = getattr(fn, "_cache_size", None)
-        return int(sizer()) if callable(sizer) else -1
+        if any(c == -1 for c in counts):
+            return -1
+        return sum(counts)
 
     # -- request intake -------------------------------------------------------
 
@@ -235,40 +289,68 @@ class PixieFleet:
 
     def result(self, ticket: int) -> np.ndarray:
         """Redeem a flushed ticket (pops it from the retained results)."""
-        return self._results.pop(ticket)
+        try:
+            return self._results.pop(ticket)
+        except KeyError:
+            raise KeyError(
+                f"no retained result for ticket {ticket}: it was never "
+                f"flushed, was already redeemed, or was evicted by the "
+                f"retention bound (max_retained_results="
+                f"{self.max_retained_results}); redeem tickets promptly or "
+                f"raise the bound"
+            ) from None
 
     def discard(self, ticket: int) -> None:
         """Drop a retained result without redeeming it (callers that consume
         flush()'s return value directly use this to release retention)."""
         self._results.pop(ticket, None)
 
-    def _stacked_bank(self, grid: GridSpec, configs: List[VCGRAConfig]):
+    def _stacked_bank(self, grid: GridSpec, configs: List[VCGRAConfig],
+                      fused: bool = False):
         """Stacked settings for a tenant set, cached across flushes when
         every config carries a cache identity (i.e. came through
-        :meth:`config_for`)."""
+        :meth:`config_for`).  For fused dispatches the bank also carries
+        the stacked ingest-plan arrays (tap selects + const values)."""
+
+        def build():
+            stacked = VCGRAConfig.stack(configs)
+            if not fused:
+                return stacked
+            plans = [c.ingest for c in configs]
+            return stacked, IngestPlan.stack(plans, grid.dtype)
+
         keys = tuple(c.cache_key for c in configs)
         if any(k is None for k in keys):
-            return VCGRAConfig.stack(configs)
-        bkey = (grid, keys)
+            return build()
+        bkey = (grid, keys, fused)
         stacked = self._banks.get(bkey)
         if stacked is not None:
             self.stats.stack_bank_hits += 1
             return stacked
-        stacked = VCGRAConfig.stack(configs)
+        stacked = build()
         self._banks.put(bkey, stacked)
         return stacked
 
     # -- batched execution ----------------------------------------------------
 
-    def _prepare(
-        self, request: FleetRequest
-    ) -> Tuple[GridSpec, VCGRAConfig, jnp.ndarray, Optional[Tuple[int, int]]]:
+    def _prepare(self, request: FleetRequest) -> _Prepared:
+        t0 = time.perf_counter()
         grid = request.grid or self.default_grid
         cfg = self.config_for(request.app, grid)
         if request.image is not None:
-            image = jnp.asarray(request.image)
+            image = np.asarray(request.image)
+            if image.ndim != 2:
+                raise ValueError(f"image must be [H, W], got shape {image.shape}")
             hw = tuple(image.shape)
-            taps = app_lib.stencil_inputs(image)
+            if cfg.ingest is not None:
+                # Fused path: keep the RAW frame; line-buffer formation
+                # happens inside the batched dispatch at flush time.
+                prepared = _Prepared(grid, cfg, "image", image, hw)
+                self.timings["pack_s"] += time.perf_counter() - t0
+                return prepared
+            # No ingest plan (a channel is neither tap nor const): fall
+            # back to host-side tap packing so the request still runs.
+            taps = app_lib.stencil_inputs(jnp.asarray(image))
             feed = {k: v for k, v in taps.items() if k in cfg.input_order}
         else:
             hw = None
@@ -276,44 +358,116 @@ class PixieFleet:
         x = interpreter.pack_inputs(cfg, feed, grid.dtype)
         if x.ndim != 2:
             raise ValueError(f"fleet needs flat [channels, batch] inputs, got {x.shape}")
-        return grid, cfg, interpreter.pad_channels(x, grid.num_inputs), hw
+        prepared = _Prepared(
+            grid, cfg, "channels", interpreter.pad_channels(x, grid.num_inputs), hw
+        )
+        self.timings["pack_s"] += time.perf_counter() - t0
+        return prepared
+
+    def _dispatch_fused(
+        self, grid: GridSpec, radius: int,
+        items: List[Tuple[int, _Prepared]], out: Dict[int, np.ndarray],
+    ) -> None:
+        """One fused dispatch: raw frames -> outputs, line buffers inside.
+
+        Frames are embedded top-left into one zero canvas [n_tile, Hb, Wb]
+        (pow-2-bucketed sides, app axis rounded to batch_tile) on the HOST
+        -- the dispatch is the only device operation.  The zero canvas
+        right/below a frame is read by edge taps exactly like
+        ``stencil_inputs``'s zero border, so the [H, W] slice of the output
+        is bitwise identical to the unfused path.
+        """
+        t0 = time.perf_counter()
+        fn = self.fused_overlay_for(grid, radius)
+        n = len(items)
+        n_tile = _round_up(n, self.batch_tile)
+        Hb = _pow2_bucket(max(p.hw[0] for _, p in items), self.min_image_side)
+        Wb = _pow2_bucket(max(p.hw[1] for _, p in items), self.min_image_side)
+        canvas = np.zeros((n_tile, Hb, Wb), dtype=grid.dtype)
+        for i, (_, p) in enumerate(items):
+            H, W = p.hw
+            canvas[i, :H, :W] = p.payload
+        configs = [p.cfg for _, p in items]
+        # Tile padding on the app axis: replay config[0] on a zero frame.
+        configs += [configs[0]] * (n_tile - n)
+        self.stats.padded_app_slots += n_tile - n
+
+        stacked, ingests = self._stacked_bank(grid, configs, fused=True)
+        # The canvas embed + bank build above are host-side pack work; only
+        # the overlay execution below counts as dispatch.
+        self.timings["pack_s"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ys = fn(stacked, ingests, jnp.asarray(canvas))
+        self.stats.dispatches += 1
+        self.stats.fused_dispatches += 1
+        self.stats.executed += n
+        for i, (ticket, p) in enumerate(items):
+            H, W = p.hw
+            y = np.asarray(ys[i]).reshape((-1, Hb, Wb))[:, :H, :W]
+            out[ticket] = y[0] if y.shape[0] == 1 else y
+        self.timings["dispatch_s"] += time.perf_counter() - t0
+
+    def _dispatch_packed(
+        self, grid: GridSpec,
+        items: List[Tuple[int, _Prepared]], out: Dict[int, np.ndarray],
+    ) -> None:
+        """One unfused dispatch over host-packed [channels, batch] inputs
+        (named-channel requests and image apps without an ingest plan)."""
+        t0 = time.perf_counter()
+        fn = self.overlay_for(grid)
+        n = len(items)
+        n_tile = _round_up(n, self.batch_tile)
+        batch = _pow2_bucket(max(p.payload.shape[-1] for _, p in items),
+                             self.min_pixel_batch)
+        configs = [p.cfg for _, p in items]
+        xs = interpreter.pad_batches([p.payload for _, p in items], batch)
+        # Tile padding on the app axis: replay config[0] on zero pixels.
+        configs += [configs[0]] * (n_tile - n)
+        xs += [jnp.zeros_like(xs[0])] * (n_tile - n)
+        self.stats.padded_app_slots += n_tile - n
+        stacked = self._stacked_bank(grid, configs)
+        xstack = jnp.stack(xs)
+        self.timings["pack_s"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        ys = fn(stacked, xstack)
+        self.stats.dispatches += 1
+        self.stats.executed += n
+        for i, (ticket, p) in enumerate(items):
+            y = np.asarray(ys[i, :, : p.payload.shape[-1]])
+            if p.hw is not None:
+                H, W = p.hw
+                y = y[:, : H * W].reshape((-1, H, W))
+                y = y[0] if y.shape[0] == 1 else y
+            out[ticket] = y
+        self.timings["dispatch_s"] += time.perf_counter() - t0
 
     def flush(self) -> Dict[int, np.ndarray]:
-        """Run every pending request; one overlay dispatch per grid group.
+        """Run every pending request; one overlay dispatch per grid group
+        (two when a group mixes fused image requests with named-channel
+        requests).
 
         Returns {ticket: output}; image requests come back as [H, W] (or
         [num_outputs, H, W]), channel requests as [num_outputs, batch].
         """
         pending, self._pending = self._pending, []
-        groups: Dict[GridSpec, List[Tuple[int, VCGRAConfig, jnp.ndarray, Any]]] = {}
-        for ticket, (grid, cfg, x, hw) in pending:
-            groups.setdefault(grid, []).append((ticket, cfg, x, hw))
+        # Group by (grid, path): fused image groups additionally key on the
+        # stencil radius, which fixes the tap-bank layout of the executable.
+        groups: Dict[Tuple, List[Tuple[int, _Prepared]]] = {}
+        for ticket, p in pending:
+            if p.kind == "image":
+                key = (p.grid, "image", p.cfg.ingest.radius)
+            else:
+                key = (p.grid, "channels")
+            groups.setdefault(key, []).append((ticket, p))
 
         out: Dict[int, np.ndarray] = {}
         t0 = time.perf_counter()
-        for grid, items in groups.items():
-            fn = self.overlay_for(grid)
-            n = len(items)
-            n_tile = _round_up(n, self.batch_tile)
-            batch = _pow2_bucket(max(x.shape[-1] for _, _, x, _ in items),
-                                 self.min_pixel_batch)
-            configs = [cfg for _, cfg, _, _ in items]
-            xs = interpreter.pad_batches([x for _, _, x, _ in items], batch)
-            # Tile padding on the app axis: replay config[0] on zero pixels.
-            configs += [configs[0]] * (n_tile - n)
-            xs += [jnp.zeros_like(xs[0])] * (n_tile - n)
-            self.stats.padded_app_slots += n_tile - n
-
-            ys = fn(self._stacked_bank(grid, configs), jnp.stack(xs))
-            self.stats.dispatches += 1
-            self.stats.executed += n
-            for i, (ticket, cfg, x, hw) in enumerate(items):
-                y = np.asarray(ys[i, :, : x.shape[-1]])
-                if hw is not None:
-                    H, W = hw
-                    y = y[:, : H * W].reshape((-1, H, W))
-                    y = y[0] if y.shape[0] == 1 else y
-                out[ticket] = y
+        for key, items in groups.items():
+            if key[1] == "image":
+                self._dispatch_fused(key[0], key[2], items, out)
+            else:
+                self._dispatch_packed(key[0], items, out)
         self.timings["flush_s"] = time.perf_counter() - t0
         self._results.update(out)
         while len(self._results) > self.max_retained_results:

@@ -6,7 +6,10 @@ for *named image operations* ("sobel_x on this frame"), the front-end
 queues them, and each service tick drains the queue through
 :class:`repro.runtime.fleet.PixieFleet` -- one vmapped overlay dispatch
 for every distinct grid, regardless of how many different applications
-are in flight.
+are in flight.  Frames ride the fused-ingest path end to end: the raw
+image is handed to the fleet at submit and line-buffer formation happens
+inside the batched dispatch, so a service tick is one device operation
+per grid group.
 
 Deliberately transport-agnostic (no HTTP server in the core library): an
 RPC layer would call :meth:`submit` on arrival and :meth:`tick` on a
@@ -121,3 +124,9 @@ class FleetFrontend:
     @property
     def stats(self):
         return self.fleet.stats
+
+    @property
+    def timings(self):
+        """Fleet timing split: cumulative ``pack_s`` (host-side input prep)
+        vs ``dispatch_s`` (device execution) plus last ``flush_s``."""
+        return self.fleet.timings

@@ -30,3 +30,21 @@ def pytest_collection_modifyitems(config, items):
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def shared_app_grid(app_names, name="shared", slack=1):
+    """One grid big enough for every named library app (the paper's
+    "application specific grid designs", Sec. III-C): per-level width =
+    max demand across the apps + slack.  Shared by the fleet/ingest/
+    property suites so multi-tenant tests stack different apps on one
+    overlay.  (Imports deferred: see the jax note at the top.)"""
+    from repro.core import applications as apps
+    from repro.core.grid import custom
+    from repro.core.place import level_demand
+
+    dfgs = [apps.ALL_APPS[n]() for n in app_names]
+    demands = [level_demand(g) for g in dfgs]
+    depth = max(len(d) for d in demands)
+    demands = [list(d) + [1] * (depth - len(d)) for d in demands]
+    widths = [max(d[lvl] for d in demands) + slack for lvl in range(depth)]
+    return custom(name, max(len(g.inputs) for g in dfgs), widths, 1)

@@ -7,14 +7,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import shared_app_grid
+
 from repro.core import Pixie, map_app, sobel_grid
 from repro.core import applications as apps
 from repro.core.bitstream import VCGRAConfig
-from repro.core.grid import custom
 from repro.core.interpreter import (
     make_batched_overlay_fn, make_overlay_fn, pack_inputs, pad_channels,
 )
-from repro.core.place import level_demand
 from repro.runtime.fleet import FleetRequest, LRUCache, PixieFleet
 from repro.serve.fleet_frontend import FleetFrontend
 
@@ -27,12 +27,7 @@ TRIO = ["sobel_x", "threshold", "gauss3"]
 
 
 def shared_grid(app_names):
-    dfgs = [apps.ALL_APPS[n]() for n in app_names]
-    demands = [level_demand(g) for g in dfgs]
-    depth = max(len(d) for d in demands)
-    demands = [list(d) + [1] * (depth - len(d)) for d in demands]
-    widths = [max(d[l] for d in demands) + 1 for l in range(depth)]  # +1 slack
-    return custom("fleet-shared", max(len(g.inputs) for g in dfgs), widths, 1)
+    return shared_app_grid(app_names, name="fleet-shared")
 
 
 def sequential_reference(grid, app_names, images):

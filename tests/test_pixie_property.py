@@ -18,10 +18,16 @@ import pytest
 pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
+from conftest import shared_app_grid
+
 from repro.core import DFG, Op, for_dfg, map_app, place, route
+from repro.core import applications as apps
 from repro.core.dfg import reference_eval
-from repro.core.interpreter import make_overlay_fn, pack_inputs
+from repro.core.interpreter import (
+    make_overlay_fn, pack_inputs, pad_channels,
+)
 from repro.core.specialize import build_specialized_fn
+from repro.runtime.fleet import FleetRequest, PixieFleet
 
 OPS = [Op.ADD, Op.SUB, Op.MUL, Op.DIV, Op.GT, Op.EQ, Op.BUF, Op.MAX, Op.MIN, Op.ABS]
 
@@ -93,6 +99,54 @@ def test_exact_grid_always_fits_and_routes(g):
     # every level fully utilised by construction of shape='exact'
     for lvl, cells in enumerate(pl.cells):
         assert len(cells) == grid.pes_per_level[lvl]
+
+
+# -- fused device-side ingest == host-side two-step path ----------------------
+
+ALL_NAMES = sorted(apps.ALL_APPS)
+_FUSED_GRID = shared_app_grid(ALL_NAMES, name="prop-fused")
+_FUSED_OVERLAY = make_overlay_fn(_FUSED_GRID)
+_FUSED_FLEET = PixieFleet(default_grid=_FUSED_GRID, batch_tile=4)
+
+
+@st.composite
+def fused_batches(draw):
+    """A ragged multi-tenant batch: apps from the whole library, each on
+    its own non-square frame."""
+    n = draw(st.integers(1, 4))
+    names = [draw(st.sampled_from(ALL_NAMES)) for _ in range(n)]
+    hws = [
+        (draw(st.integers(1, 13)), draw(st.integers(1, 13)))
+        for _ in range(n)
+    ]
+    seed = draw(st.integers(0, 2**31 - 1))
+    return names, hws, seed
+
+
+@settings(max_examples=25, deadline=None)
+@given(fused_batches())
+def test_fused_ingest_bitwise_identical_to_two_step(case):
+    """Fused line-buffer formation inside the batched dispatch must equal
+    stencil_inputs + pack_inputs + overlay BITWISE for every library app,
+    non-square frames, and ragged multi-tenant batches (zero canvas
+    padding sliced back)."""
+    names, hws, seed = case
+    rng = np.random.default_rng(seed)
+    images = [rng.integers(0, 256, hw).astype(np.int32) for hw in hws]
+    outs = _FUSED_FLEET.run_many(
+        [FleetRequest(app=n, image=i) for n, i in zip(names, images)]
+    )
+    for name, img, got in zip(names, images, outs):
+        cfg = map_app(apps.ALL_APPS[name](), _FUSED_GRID)
+        taps = apps.stencil_inputs(jnp.asarray(img))
+        feed = {k: v for k, v in taps.items() if k in cfg.input_order}
+        x = pad_channels(
+            pack_inputs(cfg, feed, _FUSED_GRID.dtype), _FUSED_GRID.num_inputs
+        )
+        ref = np.asarray(_FUSED_OVERLAY(cfg.to_jax(), x))
+        ref = ref.reshape((-1,) + img.shape)
+        got = got if got.ndim == 3 else got[None]
+        np.testing.assert_array_equal(got, ref)
 
 
 @settings(max_examples=30, deadline=None)
