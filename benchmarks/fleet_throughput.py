@@ -19,6 +19,9 @@ closes that gap:
                  (the PR 1 serving path, kept as the oracle)
   fused e2e      `PixieFleet.run_many` on raw frames: pack + dispatch +
                  unpack as ONE executable per grid
+  pallas e2e     the same fused fleet path on `backend="pallas"`: the
+                 batched fused-ingest megakernel (interpret mode off-TPU),
+                 measured so the BENCH trajectory covers both backends
 
 Identical inputs, bitwise-identical outputs (asserted), compile-once
 invariants asserted via the fleet's cache counters.  Emits a machine-
@@ -46,10 +49,17 @@ from repro.core import Pixie, sobel_grid
 from repro.core import applications as apps
 from repro.core.bitstream import VCGRAConfig
 from repro.core.interpreter import pack_inputs, pad_channels
+from repro.kernels.vcgra import default_interpret
 from repro.runtime.fleet import FleetRequest, PixieFleet
 
 # Library apps that fit the paper's 18-input Sobel grid.
 FLEET_APPS = ["sobel_x", "sobel_y", "sharpen", "laplace", "threshold", "identity"]
+
+# The pallas megakernel runs in *interpret mode* on CPU CI, so it is not
+# expected to beat the hand-lowered XLA path there -- the floor only guards
+# against catastrophic regressions (a broken kernel, an accidental
+# per-frame retrace).  Measured ~0.5x of the XLA fused path on CPU.
+PALLAS_FLOOR_VS_XLA = 0.05
 
 
 def _time(fn, reps: int) -> float:
@@ -139,6 +149,28 @@ def run(n_apps: int, image_hw: int, reps: int) -> dict:
     pack_s = fleet.timings["pack_s"] - pack0
     dispatch_s = fleet.timings["dispatch_s"] - disp0
 
+    # -- pallas backend: the batched fused-ingest megakernel ------------------
+    # Same fleet contract, backend="pallas"; bitwise-asserted against the
+    # sequential oracle, then timed (fewer reps -- interpret mode is the
+    # expected-slower path on CPU; on TPU this is the compiled path).
+    pallas_fleet = PixieFleet(default_grid=grid, batch_tile=n_apps,
+                              backend="pallas")
+    for n in names:
+        pallas_fleet.config_for(n, grid)  # warm the config cache like `fleet`
+
+    def pallas_e2e():
+        return pallas_fleet.run_many(requests)
+
+    pallas_out = pallas_e2e()
+    for i in range(n_apps):
+        np.testing.assert_array_equal(
+            np.asarray(pallas_out[i]).reshape(-1), seq_out[i].reshape(-1)
+        )
+    pallas_reps = max(2, reps // 3)
+    t_pallas_e2e = _time(pallas_e2e, pallas_reps)
+    assert pallas_fleet.stats.overlay_builds == 1, pallas_fleet.stats.as_dict()
+    assert pallas_fleet.stats.backend == "pallas"
+
     # pack fraction: share of the e2e cost spent *outside* the dispatch.
     pack_fraction_unfused = max(0.0, (t_unfused_e2e - t_seq) / t_unfused_e2e)
     pack_fraction_fused = pack_s / (pack_s + dispatch_s) if pack_s + dispatch_s else 0.0
@@ -178,6 +210,18 @@ def run(n_apps: int, image_hw: int, reps: int) -> dict:
         "fleet_dispatch_s_per_round": dispatch_s / reps,
         "fleet_stats": fleet.stats.as_dict(),
         "overlay_executables": fleet.overlay_executable_count(grid),
+        # per-backend fused e2e numbers, stable keys for the trajectory
+        "backends": {
+            "xla": {"fused_e2e_s_per_round": t_fused_e2e,
+                    "fused_e2e_apps_per_s": n_apps / t_fused_e2e},
+            "pallas": {"fused_e2e_s_per_round": t_pallas_e2e,
+                       "fused_e2e_apps_per_s": n_apps / t_pallas_e2e,
+                       "interpret_mode": default_interpret()},
+        },
+        "pallas_fused_e2e_apps_per_s": n_apps / t_pallas_e2e,
+        "pallas_vs_xla_fused_e2e": t_fused_e2e / t_pallas_e2e,
+        "pallas_floor_vs_xla": PALLAS_FLOOR_VS_XLA,
+        "pallas_fleet_stats": pallas_fleet.stats.as_dict(),
     }
 
 
@@ -211,6 +255,9 @@ def main(argv=None) -> dict:
           f"(pack fraction {100*result['pack_fraction_unfused']:.0f}%)")
     print(f"  fused e2e    {result['fused_e2e_apps_per_s']:10.1f} apps/s   "
           f"(pack fraction {100*result['pack_fraction_fused']:.0f}%)")
+    mode = "interpret" if result["backends"]["pallas"]["interpret_mode"] else "compiled"
+    print(f"  pallas e2e   {result['pallas_fused_e2e_apps_per_s']:10.1f} apps/s   "
+          f"(megakernel, {mode}; x{result['pallas_vs_xla_fused_e2e']:.2f} vs xla)")
     print(f"  speedup      x{result['speedup']:.2f} dispatch, "
           f"x{result['speedup_e2e']:.2f} e2e   "
           f"(overlay builds={result['fleet_stats']['overlay_builds']}, "
@@ -229,6 +276,11 @@ def main(argv=None) -> dict:
             fails.append(f"batched dispatch x{result['speedup']:.2f} < x2")
         if result["speedup_e2e"] < 2.0:
             fails.append(f"fused e2e x{result['speedup_e2e']:.2f} < x2")
+        if result["pallas_vs_xla_fused_e2e"] < PALLAS_FLOOR_VS_XLA:
+            fails.append(
+                f"pallas fused e2e x{result['pallas_vs_xla_fused_e2e']:.3f} "
+                f"of xla < floor x{PALLAS_FLOOR_VS_XLA}"
+            )
         if fails:
             raise SystemExit("FAIL: " + "; ".join(fails))
     return result

@@ -35,6 +35,20 @@ from repro.core.ingest import IngestPlan, tap_offsets
 ConfigArrays = Tuple[Tuple[jnp.ndarray, ...], Tuple[jnp.ndarray, ...], jnp.ndarray]
 IngestArrays = Tuple[jnp.ndarray, jnp.ndarray]  # (tap_sel, const_vals)
 
+#: Execution backends for the batched overlay executors.  "xla" is the
+#: hand-lowered jnp interpreter (the bitwise oracle); "pallas" routes the
+#: same stacked settings through the batched VCGRA megakernels
+#: (``repro.kernels.vcgra``), interpreted off-TPU and compiled on TPU.
+BACKENDS = ("xla", "pallas")
+
+
+def check_backend(backend: str) -> str:
+    """Validate (and return) a backend name; shared by every layer that
+    takes the backend axis (interpreter, fleet, front-end)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    return backend
+
 
 def pack_inputs(
     config: VCGRAConfig,
@@ -141,7 +155,7 @@ def batched_overlay_step(
     return y.reshape((n, -1) + x.shape[2:])
 
 
-def make_batched_overlay_fn(grid: GridSpec):
+def make_batched_overlay_fn(grid: GridSpec, backend: str = "xla"):
     """Build the jit-once *multi-tenant* overlay executor for a grid.
 
     Returns ``fn(stacked_configs, xs) -> ys`` with
@@ -149,8 +163,16 @@ def make_batched_overlay_fn(grid: GridSpec):
     Like :func:`make_overlay_fn` the executable depends only on the grid
     structure and the (N, batch) shape -- any N applications mapped on the
     grid share it, so a fleet scheduler that pads to fixed (N, batch) tiles
-    compiles exactly once per grid.
+    compiles exactly once per (grid, backend).
+
+    ``backend="pallas"`` returns the batched VCGRA kernel with the same
+    signature and bitwise-identical outputs (settings scalar-prefetched to
+    SMEM instead of gathered); the XLA path stays the oracle.
     """
+    if check_backend(backend) == "pallas":
+        from repro.kernels.vcgra.ops import make_batched_pallas_fn
+
+        return make_batched_pallas_fn(grid)
     return jax.jit(partial(batched_overlay_step, grid))
 
 
@@ -239,13 +261,23 @@ def batched_fused_overlay_step(
     return batched_overlay_step(grid, configs, xs)
 
 
-def make_batched_fused_overlay_fn(grid: GridSpec, radius: int = 1):
+def make_batched_fused_overlay_fn(grid: GridSpec, radius: int = 1,
+                                  backend: str = "xla"):
     """Build the jit-once *multi-tenant fused-ingest* overlay executor.
 
     Returns ``fn(stacked_configs, stacked_ingests, images) -> ys`` with
     ``images: [N, H, W] -> ys: [N, num_outputs, H*W]``.  One executable
-    per (grid, radius, N, H, W); a fleet that pads N and the frame canvas
-    to fixed tiles compiles exactly once per grid."""
+    per (grid, radius, backend, N, H, W); a fleet that pads N and the
+    frame canvas to fixed tiles compiles exactly once per grid.
+
+    ``backend="pallas"`` returns the batched fused-ingest *megakernel*
+    (``repro.kernels.vcgra.vcgra_fused_batched``): tap-bank formation,
+    settings-gathered VC muxing and PE execution all inside one
+    pallas_call, same signature, bitwise-identical outputs."""
+    if check_backend(backend) == "pallas":
+        from repro.kernels.vcgra.ops import make_batched_fused_pallas_fn
+
+        return make_batched_fused_pallas_fn(grid, radius)
     return jax.jit(partial(batched_fused_overlay_step, grid, radius))
 
 

@@ -11,7 +11,7 @@ host-issued shift/stack ops per frame.
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,10 @@ from repro.core.interpreter import apply_ingest, form_tap_bank, pack_inputs
 from repro.kernels.vcgra.vcgra_kernel import (
     LANE,
     _pack_settings,
+    default_interpret,
+    vcgra_batched,
     vcgra_conventional,
+    vcgra_fused_batched,
     vcgra_specialized,
 )
 
@@ -48,15 +51,90 @@ def _pad_batch(x: jnp.ndarray, block_n: int):
     return x, n
 
 
+def pack_settings_batched(grid: GridSpec, stacked_configs):
+    """Interpreter-style stacked settings (``VCGRAConfig.stack``: per-level
+    tuples of [N, w] / [N, w, 2] plus out_sel [N, K]) -> the dense
+    rectangular SMEM banks the batched megakernels prefetch:
+    ``(ops int32 [N, L, max_w], sel int32 [N, L, max_w, 2], out int32 [N, K])``.
+    Pad slots hold Op.NONE / select 0 and are never read (the kernel loops
+    the grid's true per-level widths)."""
+    opcodes, selects, out_sel = stacked_configs
+    max_w = max(grid.pes_per_level)
+    ops_d = jnp.stack(
+        [
+            jnp.pad(jnp.asarray(o, jnp.int32), ((0, 0), (0, max_w - o.shape[1])))
+            for o in opcodes
+        ],
+        axis=1,
+    )
+    sel_d = jnp.stack(
+        [
+            jnp.pad(
+                jnp.asarray(s, jnp.int32),
+                ((0, 0), (0, max_w - s.shape[1]), (0, 0)),
+            )
+            for s in selects
+        ],
+        axis=1,
+    )
+    return ops_d, sel_d, jnp.asarray(out_sel, jnp.int32)
+
+
+def make_batched_fused_pallas_fn(grid: GridSpec, radius: int = 1,
+                                 interpret=None):
+    """Build the jit-once batched fused-ingest *megakernel* executor.
+
+    Drop-in signature twin of ``interpreter.make_batched_fused_overlay_fn``:
+    ``fn(stacked_configs, stacked_ingests, images) -> ys`` with
+    ``images: [N, H, W] -> ys: [N, num_outputs, H*W]``.  Settings and
+    ingest plans are runtime operands (scalar-prefetched to SMEM), so one
+    executable per (grid, radius, N, H, W) serves every application --
+    the same compile-once contract as the XLA path, bitwise-equal outputs.
+    """
+
+    def fn(stacked_configs, stacked_ingests, images):
+        settings = pack_settings_batched(grid, stacked_configs)
+        tap_sel, const_vals = stacked_ingests
+        return vcgra_fused_batched(
+            grid, radius, settings,
+            (jnp.asarray(tap_sel, jnp.int32), const_vals),
+            images, interpret=interpret,
+        )
+
+    return jax.jit(fn)
+
+
+def make_batched_pallas_fn(grid: GridSpec, block_n: int = LANE, interpret=None):
+    """Build the jit-once batched (pre-packed channels) kernel executor --
+    the Pallas twin of ``interpreter.make_batched_overlay_fn``:
+    ``fn(stacked_configs, xs) -> ys`` with ``xs: [N, num_inputs, B]``.
+    The pixel axis is padded to a ``block_n`` multiple inside the jitted
+    function and sliced back, so callers keep the XLA path's contract."""
+
+    def fn(stacked_configs, xs):
+        settings = pack_settings_batched(grid, stacked_configs)
+        b = xs.shape[-1]
+        rem = (-b) % block_n
+        if rem:
+            xs = jnp.pad(xs, ((0, 0), (0, 0), (0, rem)))
+        ys = vcgra_batched(grid, settings, xs, block_n=block_n,
+                           interpret=interpret)
+        return ys[:, :, :b]
+
+    return jax.jit(fn)
+
+
 def vcgra_apply(
     grid: GridSpec,
     config: VCGRAConfig,
     x: jnp.ndarray,
     mode: str = "specialized",
     block_n: int = 1024,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Run a mapped application over a channel-major batch [num_inputs, N]."""
+    """Run a mapped application over a channel-major batch [num_inputs, N].
+    ``interpret=None`` auto-detects the platform (compiled on TPU,
+    interpreted elsewhere)."""
     xp, n = _pad_batch(x, block_n)
     if mode == "specialized":
         fn = jax.jit(
@@ -84,7 +162,7 @@ def vcgra_apply_image(
     image: jnp.ndarray,
     mode: str = "specialized",
     block_n: int = 1024,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Stencil-app convenience: [H, W] image -> [H, W] (or [K, H, W]) output.
 

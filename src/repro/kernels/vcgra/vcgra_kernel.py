@@ -27,7 +27,7 @@ unrolled inside the kernel: VMEM working set is
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,10 +37,21 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import ops as pe_ops
 from repro.core.bitstream import VCGRAConfig
 from repro.core.grid import GridSpec
+from repro.core.ingest import tap_offsets
 from repro.core.ops import Op
 from repro.core.specialize import _live_slots
 
 LANE = 128
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compiled on a real TPU, interpreted
+    everywhere else (CPU/GPU CI).  Callers can always override."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 # -- specialized kernel --------------------------------------------------------
@@ -75,9 +86,13 @@ def vcgra_specialized(
     config: VCGRAConfig,
     x: jnp.ndarray,
     block_n: int = 1024,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
-    """Specialized-path pallas executor.  x: [num_inputs, N] (N % block_n == 0)."""
+    """Specialized-path pallas executor.  x: [num_inputs, N] (N % block_n == 0).
+
+    ``interpret=None`` auto-detects the platform (compiled on TPU,
+    interpreted elsewhere)."""
+    interpret = _resolve_interpret(interpret)
     n_in, n = x.shape
     assert n % block_n == 0, f"N={n} not a multiple of block_n={block_n}"
     assert block_n % LANE == 0, f"block_n must be lane-aligned (x{LANE})"
@@ -95,7 +110,44 @@ def vcgra_specialized(
 # -- conventional kernel ---------------------------------------------------------
 
 
-def _conventional_body(grid: GridSpec, max_w: int, op_ref, sel_ref, out_ref, x_ref, o_ref):
+def _level_pipeline(grid: GridSpec, idx: Tuple, op_ref, sel_ref,
+                    x: jnp.ndarray) -> jnp.ndarray:
+    """The conventional PE-level pipeline, shared by the single-app and
+    batched kernel bodies.
+
+    ``idx`` prefixes every SMEM read: ``()`` for per-app settings refs
+    (``op_ref [L, max_w]``), ``(i,)`` for batched banks with a leading app
+    axis (``op_ref [N, L, max_w]``).  ``x``: [num_inputs, pixels] ->
+    [last_level_width, pixels].  Dense settings are padded to max_w but
+    only the grid's true per-level width is ever read, so pad slots cost
+    nothing.
+    """
+    prev = x
+    for lvl in range(grid.num_levels):  # grid structure static, settings not
+        width = grid.pes_per_level[lvl]
+        a_rows = []
+        b_rows = []
+        for slot in range(width):
+            sa = sel_ref[idx + (lvl, slot, 0)]
+            sb = sel_ref[idx + (lvl, slot, 1)]
+            a_rows.append(jax.lax.dynamic_index_in_dim(prev, sa, 0, keepdims=False))
+            b_rows.append(jax.lax.dynamic_index_in_dim(prev, sb, 0, keepdims=False))
+        a = jnp.stack(a_rows, axis=0)
+        b = jnp.stack(b_rows, axis=0)
+        opcodes = jnp.stack([op_ref[idx + (lvl, s)] for s in range(width)])
+        prev = pe_ops.apply_generic(opcodes, a, b)
+    return prev
+
+
+def _gather_outputs(grid: GridSpec, idx: Tuple, outsel_ref, prev: jnp.ndarray, dtype):
+    rows = [
+        jax.lax.dynamic_index_in_dim(prev, outsel_ref[idx + (k,)], 0, keepdims=False)
+        for k in range(grid.num_outputs)
+    ]
+    return jnp.stack(rows, axis=0).astype(dtype)
+
+
+def _conventional_body(grid: GridSpec, op_ref, sel_ref, out_ref, x_ref, o_ref):
     """Settings in SMEM; generic PEs; dynamic routing selects.
 
     op_ref:  SMEM int32 [num_levels, max_w]
@@ -103,26 +155,8 @@ def _conventional_body(grid: GridSpec, max_w: int, op_ref, sel_ref, out_ref, x_r
     out_ref: SMEM int32 [num_outputs]
     """
     x = x_ref[...]                      # [num_inputs, block_n]
-    dtype = x.dtype
-    prev = x
-    for lvl in range(grid.num_levels):  # grid structure static, settings not
-        width = grid.pes_per_level[lvl]
-        a_rows = []
-        b_rows = []
-        for slot in range(width):
-            sa = sel_ref[lvl, slot, 0]
-            sb = sel_ref[lvl, slot, 1]
-            a_rows.append(jax.lax.dynamic_index_in_dim(prev, sa, 0, keepdims=False))
-            b_rows.append(jax.lax.dynamic_index_in_dim(prev, sb, 0, keepdims=False))
-        a = jnp.stack(a_rows, axis=0)
-        b = jnp.stack(b_rows, axis=0)
-        opcodes = jnp.stack([op_ref[lvl, s] for s in range(width)])
-        prev = pe_ops.apply_generic(opcodes, a, b)
-    rows = [
-        jax.lax.dynamic_index_in_dim(prev, out_ref[k], 0, keepdims=False)
-        for k in range(grid.num_outputs)
-    ]
-    o_ref[...] = jnp.stack(rows, axis=0).astype(dtype)
+    prev = _level_pipeline(grid, (), op_ref, sel_ref, x)
+    o_ref[...] = _gather_outputs(grid, (), out_ref, prev, x.dtype)
 
 
 def _pack_settings(grid: GridSpec, config: VCGRAConfig):
@@ -143,15 +177,16 @@ def vcgra_conventional(
     config_arrays: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
     x: jnp.ndarray,
     block_n: int = 1024,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     """Conventional-path pallas executor: one executable per *grid*, any
-    application's packed settings arrays accepted at runtime."""
+    application's packed settings arrays accepted at runtime.
+    ``interpret=None`` auto-detects the platform."""
+    interpret = _resolve_interpret(interpret)
     ops_arr, sel_arr, out_sel = config_arrays
     n_in, n = x.shape
     assert n % block_n == 0 and block_n % LANE == 0
-    max_w = ops_arr.shape[1]
-    body = functools.partial(_conventional_body, grid, max_w)
+    body = functools.partial(_conventional_body, grid)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(n // block_n,),
@@ -166,3 +201,157 @@ def vcgra_conventional(
         grid_spec=grid_spec,
         interpret=interpret,
     )(ops_arr, sel_arr, out_sel, x)
+
+
+# -- batched megakernels -------------------------------------------------------
+#
+# The multi-tenant twins of the interpreter's batched paths
+# (``interpreter.batched_overlay_step`` / ``batched_fused_overlay_step``):
+# ONE pallas_call whose grid iterates the app axis, with every tenant's
+# settings bank (PE opcodes, VC mux selects, output selects -- and for the
+# fused variant the ingest plan's tap selects) scalar-prefetched into SMEM.
+# The kernel instance for app ``i`` indexes its own settings rows with
+# ``pl.program_id(0)``, so N different applications execute through one
+# compiled kernel -- the settings-register analogue at fleet scale.
+
+
+def _batched_body(grid: GridSpec, op_ref, sel_ref, outsel_ref, x_ref, o_ref):
+    """One app per grid step over pre-packed channels [1, C, block_n]."""
+    i = pl.program_id(0)
+    x = x_ref[0]
+    prev = _level_pipeline(grid, (i,), op_ref, sel_ref, x)
+    o_ref[0] = _gather_outputs(grid, (i,), outsel_ref, prev, x.dtype)
+
+
+def vcgra_batched(
+    grid: GridSpec,
+    settings: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    x: jnp.ndarray,
+    block_n: int = LANE,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Batched conventional executor: N tenants in ONE pallas_call.
+
+    ``settings``: dense-packed banks (ops [N, L, max_w], sel [N, L, max_w, 2],
+    out_sel [N, K]) -- see ``ops.pack_settings_batched``.
+    ``x``: [N, num_inputs, B] with ``B % block_n == 0``.
+    """
+    interpret = _resolve_interpret(interpret)
+    ops_arr, sel_arr, out_sel = settings
+    n_apps, n_in, b = x.shape
+    assert b % block_n == 0, f"B={b} not a multiple of block_n={block_n}"
+    assert block_n % LANE == 0, f"block_n must be lane-aligned (x{LANE})"
+    body = functools.partial(_batched_body, grid)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_apps, b // block_n),
+        in_specs=[pl.BlockSpec((1, n_in, block_n), lambda i, j, *_: (i, 0, j))],
+        out_specs=pl.BlockSpec(
+            (1, grid.num_outputs, block_n), lambda i, j, *_: (i, 0, j)
+        ),
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct((n_apps, grid.num_outputs, b), x.dtype),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(ops_arr, sel_arr, out_sel, x)
+
+
+def _fused_batched_body(
+    grid: GridSpec, radius: int,
+    tap_sel_ref, op_ref, sel_ref, outsel_ref, const_ref, img_ref, o_ref,
+):
+    """Fused-ingest megakernel body: raw frame -> outputs, per app.
+
+    The whole Pixie data path runs inside the kernel instance: the frame
+    block is zero-padded and sliced into the tap bank (line-buffer
+    formation; offsets are trace-time constants), each memory-VC channel
+    *selects* its producer from the bank via the SMEM tap_sel row (ingest
+    plans are runtime settings, like VC muxes), then the conventional PE
+    pipeline executes on the channels -- all without the frame ever leaving
+    VMEM.
+    """
+    i = pl.program_id(0)
+    img = img_ref[0]                    # [H, W] raw frame
+    H, W = img.shape
+    dtype = img.dtype
+    r = radius
+    padded = jnp.pad(img, ((r, r), (r, r)))
+    taps = [
+        padded[r + dj : r + dj + H, r + di : r + di + W].reshape(H * W)
+        for dj, di in tap_offsets(radius)
+    ]
+    taps.append(jnp.zeros((H * W,), dtype))    # const/padding producer row
+    bank = jnp.stack(taps, axis=0)             # [T+1, H*W]
+    zero_row = len(taps) - 1
+    consts = const_ref[0]                      # [C] in grid dtype
+    chans = []
+    for c in range(grid.num_inputs):
+        t = tap_sel_ref[i, c]
+        row = jax.lax.dynamic_index_in_dim(bank, t, 0, keepdims=False)
+        chans.append(jnp.where(t == zero_row, consts[c], row))
+    x = jnp.stack(chans, axis=0)               # [C, H*W] memory-VC channels
+    prev = _level_pipeline(grid, (i,), op_ref, sel_ref, x)
+    o_ref[0] = _gather_outputs(grid, (i,), outsel_ref, prev, dtype)
+
+
+def vcgra_fused_batched(
+    grid: GridSpec,
+    radius: int,
+    settings: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    ingests: Tuple[jnp.ndarray, jnp.ndarray],
+    images: jnp.ndarray,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Batched fused-ingest megakernel: N raw frames, N tenants, ONE
+    pallas_call -- the Pallas twin of
+    ``interpreter.make_batched_fused_overlay_fn``.
+
+    ``settings``: dense banks (ops [N, L, max_w], sel [N, L, max_w, 2],
+    out_sel [N, K]); ``ingests``: (tap_sel int32 [N, C], const_vals [N, C]
+    in grid dtype); ``images``: [N, H, W], cast to the grid dtype at entry
+    exactly like the XLA path's ``form_tap_bank`` (so parity holds even
+    for frames arriving in another dtype).  Returns [N, num_outputs, H*W]
+    in the grid dtype.
+
+    Blocking: one full frame per kernel instance (grid iterates the app
+    axis), so VMEM holds ``O((T+1 + max_level_width) * H * W)`` elements.
+    Pixel-axis tiling would need a row halo exchange between blocks and is
+    deferred until a real-TPU profile justifies it (see DESIGN.md).
+    """
+    interpret = _resolve_interpret(interpret)
+    ops_arr, sel_arr, out_sel = settings
+    tap_sel, const_vals = ingests
+    images = jnp.asarray(images, grid.dtype)
+    n_apps, H, W = images.shape
+    # The compiled (real-TPU) path has never been profiled and needs a
+    # lane-aligned pixel block; fail with a clear message instead of an
+    # obscure Mosaic lowering error.  The fleet's pow-2 canvas bucketing
+    # (min side 16) satisfies this; direct callers must pad the canvas.
+    # Interpret mode (CPU/GPU CI) has no layout constraint.
+    assert interpret or (H * W) % LANE == 0, (
+        f"compiled megakernel needs a lane-aligned frame block: "
+        f"H*W={H}*{W}={H * W} is not a multiple of {LANE}; pad the canvas "
+        f"(the fleet's pow-2 bucketing does) or pass interpret=True"
+    )
+    body = functools.partial(_fused_batched_body, grid, radius)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,          # tap_sel, ops, sel, out_sel -> SMEM
+        grid=(n_apps,),
+        in_specs=[
+            pl.BlockSpec((1, grid.num_inputs), lambda i, *_: (i, 0)),
+            pl.BlockSpec((1, H, W), lambda i, *_: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, grid.num_outputs, H * W), lambda i, *_: (i, 0, 0)
+        ),
+    )
+    return pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_apps, grid.num_outputs, H * W), images.dtype
+        ),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(tap_sel, ops_arr, sel_arr, out_sel, const_vals, images)

@@ -110,6 +110,7 @@ class FleetRequest:
 
 @dataclasses.dataclass
 class FleetStats:
+    backend: str = "xla"         # execution backend of every dispatch
     submitted: int = 0
     executed: int = 0
     dispatches: int = 0          # batched overlay launches
@@ -166,20 +167,26 @@ class PixieFleet:
         max_overlays: int = 8,
         max_configs: int = 256,
         max_retained_results: int = 1024,
+        backend: str = "xla",
     ):
         self.default_grid = default_grid or gridlib.sobel_grid()
+        # Execution backend for every dispatch: "xla" (the hand-lowered
+        # jnp interpreter, the bitwise oracle) or "pallas" (the batched
+        # VCGRA megakernels, interpreted off-TPU / compiled on TPU).
+        self.backend = interpreter.check_backend(backend)
         self.batch_tile = int(batch_tile)
         self.min_pixel_batch = int(min_pixel_batch)
         # Fused frame canvases bucket H and W separately; the floor keeps
         # the same ~min_pixel_batch pixels per tile as the unfused path.
         self.min_image_side = max(1, int(math.isqrt(self.min_pixel_batch)))
-        # Keyed by GridSpec (unfused) or (GridSpec, "fused", radius).
+        # Keyed by (GridSpec, "packed", backend) or
+        # (GridSpec, "fused", radius, backend).
         self._overlays = LRUCache(max_overlays)
         self._configs = LRUCache(max_configs)
         # Stacked settings banks: a repeat flush of the same tenant set
         # skips re-stacking N configs (keyed by their cache identities).
         self._banks = LRUCache(4 * max_overlays)
-        self.stats = FleetStats()
+        self.stats = FleetStats(backend=backend)
         self._pending: List[Tuple[int, Tuple]] = []
         # Bounded: unredeemed tickets are evicted oldest-first so a service
         # that only consumes flush()'s return value cannot leak memory.
@@ -222,28 +229,31 @@ class PixieFleet:
 
     def overlay_for(self, grid: GridSpec) -> Callable:
         """The jitted batched overlay executor for ``grid`` -- built once
-        per grid structure, shared by every tile shape via XLA's own
-        shape-keyed jit cache."""
-        fn = self._overlays.get(grid)
+        per (grid structure, backend), shared by every tile shape via
+        XLA's own shape-keyed jit cache."""
+        key = (grid, "packed", self.backend)
+        fn = self._overlays.get(key)
         if fn is not None:
             self.stats.overlay_cache_hits += 1
             return fn
-        fn = interpreter.make_batched_overlay_fn(grid)
+        fn = interpreter.make_batched_overlay_fn(grid, backend=self.backend)
         self.stats.overlay_builds += 1
-        self._overlays.put(grid, fn)
+        self._overlays.put(key, fn)
         return fn
 
     def fused_overlay_for(self, grid: GridSpec, radius: int) -> Callable:
         """The jitted batched *fused-ingest* executor for ``grid``: raw
         frames in, line buffers formed inside the dispatch.  Built once per
-        (grid, stencil radius); ingest plans are runtime settings, so every
-        app shares it."""
-        key = (grid, "fused", radius)
+        (grid, stencil radius, backend); ingest plans are runtime settings,
+        so every app shares it."""
+        key = (grid, "fused", radius, self.backend)
         fn = self._overlays.get(key)
         if fn is not None:
             self.stats.overlay_cache_hits += 1
             return fn
-        fn = interpreter.make_batched_fused_overlay_fn(grid, radius)
+        fn = interpreter.make_batched_fused_overlay_fn(
+            grid, radius, backend=self.backend
+        )
         self.stats.overlay_builds += 1
         self._overlays.put(key, fn)
         return fn

@@ -28,6 +28,7 @@ import numpy as np
 from repro.core import applications as app_lib
 from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
+from repro.core.interpreter import check_backend
 from repro.runtime.fleet import FleetRequest, PixieFleet
 
 
@@ -55,8 +56,16 @@ class FleetFrontend:
         fleet: Optional[PixieFleet] = None,
         registry: Optional[Dict[str, object]] = None,
         max_done: int = 1024,
+        backend: Optional[str] = None,
     ):
-        self.fleet = fleet or PixieFleet()
+        if backend is not None:
+            check_backend(backend)
+            if fleet is not None and fleet.backend != backend:
+                raise ValueError(
+                    f"backend={backend!r} conflicts with the provided fleet's "
+                    f"backend {fleet.backend!r}; configure the PixieFleet instead"
+                )
+        self.fleet = fleet or PixieFleet(backend=backend or "xla")
         # Name -> DFG factory; defaults to the paper's application library.
         self.registry = dict(registry) if registry is not None else dict(app_lib.ALL_APPS)
         self._arrivals: Dict[int, Tuple[str, float]] = {}
@@ -120,6 +129,11 @@ class FleetFrontend:
         tickets = [self.submit(app, image) for app, image in requests]
         self.tick()
         return [self.take(t) for t in tickets]
+
+    @property
+    def backend(self) -> str:
+        """Execution backend of the underlying fleet ("xla" or "pallas")."""
+        return self.fleet.backend
 
     @property
     def stats(self):

@@ -2,7 +2,10 @@
 must be *bitwise* identical to the host-side two-step oracle
 (``applications.stencil_inputs`` + ``interpreter.pack_inputs`` + overlay)
 -- across every library app, non-square frames, ragged multi-tenant
-batches, and both the single-app and fleet entry points."""
+batches, and both the single-app and fleet entry points.  The batched
+equivalence tests are parametrized over ``backend=xla|pallas`` so the
+fused-ingest megakernel (interpret mode off-TPU) cannot drift from the
+interpreter oracle without failing PRs."""
 
 import jax.numpy as jnp
 import numpy as np
@@ -95,9 +98,11 @@ def test_fused_overlay_matches_unfused_all_apps(name, rng):
     np.testing.assert_array_equal(got, ref)
 
 
-def test_batched_fused_matches_unfused_ragged(rng):
-    """Ragged multi-tenant frames on one zero canvas: each [H, W] output
-    slice is bitwise identical to the per-app unfused path."""
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_batched_fused_matches_unfused_ragged(backend, rng):
+    """Ragged multi-tenant non-square frames on one zero canvas: each
+    [H, W] output slice is bitwise identical to the per-app unfused path,
+    on both the XLA interpreter and the Pallas megakernel backends."""
     names = ["sobel_mag", "gauss3", "threshold", "identity", "laplace"]
     hws = [(5, 9), (12, 4), (7, 7), (3, 11), (10, 6)]
     images = [rng.integers(0, 256, hw).astype(np.int32) for hw in hws]
@@ -109,7 +114,7 @@ def test_batched_fused_matches_unfused_ragged(rng):
     for i, img in enumerate(images):
         canvas[i, : img.shape[0], : img.shape[1]] = img
 
-    fn = make_batched_fused_overlay_fn(GRID_ALL)
+    fn = make_batched_fused_overlay_fn(GRID_ALL, backend=backend)
     ys = fn(
         VCGRAConfig.stack(configs),
         IngestPlan.stack([c.ingest for c in configs], GRID_ALL.dtype),
@@ -122,10 +127,12 @@ def test_batched_fused_matches_unfused_ragged(rng):
         np.testing.assert_array_equal(got, ref)
 
 
-def test_fleet_fused_all_apps_one_flush(rng):
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fleet_fused_all_apps_one_flush(backend, rng):
     """The full fleet path (submit raw frames, one fused dispatch) vs the
-    sequential unfused oracle, all library apps, ragged non-square sizes."""
-    fleet = PixieFleet(default_grid=GRID_ALL)
+    sequential unfused oracle, all library apps, ragged non-square sizes,
+    on both backends."""
+    fleet = PixieFleet(default_grid=GRID_ALL, backend=backend)
     images = [
         rng.integers(0, 256, (5 + 2 * i, 17 - i)).astype(np.int32)
         for i in range(len(ALL_NAMES))
@@ -140,13 +147,15 @@ def test_fleet_fused_all_apps_one_flush(rng):
         np.testing.assert_array_equal(np.atleast_3d(y if y.ndim == 3 else y[None]), ref)
 
 
-def test_fleet_mixed_fused_and_channel_requests(rng):
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fleet_mixed_fused_and_channel_requests(backend, rng):
     """A flush mixing raw-frame (fused) and named-channel (packed) requests
-    serves both, in two dispatches, all bitwise-exact."""
+    serves both, in two dispatches, all bitwise-exact -- exercising both
+    the fused megakernel and the packed batched kernel under pallas."""
     grid = sobel_grid()
     img = rng.integers(0, 256, (6, 9)).astype(np.int32)
     x = rng.integers(0, 256, (23,)).astype(np.int32)
-    fleet = PixieFleet(default_grid=grid)
+    fleet = PixieFleet(default_grid=grid, backend=backend)
     outs = fleet.run_many([
         FleetRequest(app="sobel_x", image=img),
         FleetRequest(app="threshold", inputs={"p11": x}),
@@ -156,10 +165,12 @@ def test_fleet_mixed_fused_and_channel_requests(rng):
     np.testing.assert_array_equal(outs[1][0], (x > 128).astype(np.int32))
 
 
-def test_fused_compile_once_across_apps_and_shapes(rng):
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_fused_compile_once_across_apps_and_shapes(backend, rng):
     """One fused executable serves every app (plans are runtime settings);
-    pow-2 canvas bucketing keeps repeat flushes on it."""
-    fleet = PixieFleet(default_grid=GRID_ALL, batch_tile=4)
+    pow-2 canvas bucketing keeps repeat flushes on it -- the compile-once
+    contract holds identically for the pallas megakernel backend."""
+    fleet = PixieFleet(default_grid=GRID_ALL, batch_tile=4, backend=backend)
     img = rng.integers(0, 256, (9, 9)).astype(np.int32)
     for names in (["sobel_x", "gauss3"], ["laplace", "identity"], ["sharpen"]):
         fleet.run_many([FleetRequest(app=n, image=img) for n in names])

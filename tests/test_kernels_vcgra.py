@@ -1,14 +1,34 @@
 """Kernel tests: VCGRA Pallas executor (specialized + conventional) vs the
-pure-jnp oracle, swept over applications, shapes and dtypes."""
+pure-jnp oracle, swept over applications, shapes and dtypes -- plus the
+batched fused-ingest megakernel (N tenants, raw frames, one pallas_call)
+vs the batched interpreter oracle."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import shared_app_grid
+
 from repro.core import for_dfg, map_app, sobel_grid
 from repro.core import applications as apps
-from repro.core.interpreter import pack_inputs
-from repro.kernels.vcgra import vcgra_apply, vcgra_apply_image, vcgra_ref
+from repro.core.bitstream import VCGRAConfig
+from repro.core.ingest import IngestPlan
+from repro.core.interpreter import (
+    batched_fused_overlay_step,
+    batched_overlay_step,
+    pack_inputs,
+    pad_channels,
+)
+from repro.kernels.vcgra import (
+    default_interpret,
+    make_batched_fused_pallas_fn,
+    make_batched_pallas_fn,
+    pack_settings_batched,
+    vcgra_apply,
+    vcgra_apply_image,
+    vcgra_ref,
+)
 from repro.kernels.vcgra.vcgra_kernel import _pack_settings
 
 
@@ -83,3 +103,124 @@ def test_conventional_settings_pack_roundtrip():
         w = grid.pes_per_level[lvl]
         np.testing.assert_array_equal(np.asarray(ops_arr)[lvl, :w], cfg.opcodes[lvl])
         np.testing.assert_array_equal(np.asarray(sel_arr)[lvl, :w], cfg.selects[lvl])
+
+
+# -- batched fused-ingest megakernel ------------------------------------------
+
+MEGA_NAMES = sorted(apps.ALL_APPS)
+MEGA_GRID = shared_app_grid(MEGA_NAMES, name="megakernel-shared")
+
+
+def test_default_interpret_is_platform_aware():
+    """interpret=None auto-detects: interpreted everywhere except real TPU
+    (the satellite fix for the unconditional interpret=True default)."""
+    on_tpu = jax.default_backend() == "tpu"
+    assert default_interpret() is (not on_tpu)
+
+
+def test_pack_settings_batched_dense_banks():
+    """Dense SMEM banks agree with the per-app `_pack_settings` rows and
+    zero-fill (Op.NONE) the pad slots beyond each level's true width."""
+    configs = [map_app(apps.ALL_APPS[n](), MEGA_GRID) for n in ["sobel_x", "gauss3"]]
+    ops_d, sel_d, out_d = pack_settings_batched(
+        MEGA_GRID, VCGRAConfig.stack(configs)
+    )
+    max_w = max(MEGA_GRID.pes_per_level)
+    n, L = len(configs), MEGA_GRID.num_levels
+    assert ops_d.shape == (n, L, max_w) and sel_d.shape == (n, L, max_w, 2)
+    assert out_d.shape == (n, MEGA_GRID.num_outputs)
+    for i, cfg in enumerate(configs):
+        ref_ops, ref_sel, ref_out, _ = _pack_settings(MEGA_GRID, cfg)
+        np.testing.assert_array_equal(np.asarray(ops_d)[i], np.asarray(ref_ops))
+        np.testing.assert_array_equal(np.asarray(sel_d)[i], np.asarray(ref_sel))
+        np.testing.assert_array_equal(np.asarray(out_d)[i], np.asarray(ref_out))
+        for lvl in range(L):
+            w = MEGA_GRID.pes_per_level[lvl]
+            assert not np.asarray(ops_d)[i, lvl, w:].any()
+
+
+def test_megakernel_fused_batched_matches_interpreter_all_apps(rng):
+    """The tentpole invariant: every library app stacked into ONE fused
+    megakernel dispatch over ragged non-square frames is bitwise equal to
+    the XLA batched fused interpreter (itself the tested oracle)."""
+    images = [
+        rng.integers(0, 256, (6 + 2 * i, 19 - i)).astype(np.int32)
+        for i in range(len(MEGA_NAMES))
+    ]
+    configs = [map_app(apps.ALL_APPS[n](), MEGA_GRID) for n in MEGA_NAMES]
+    Hb = max(i.shape[0] for i in images)
+    Wb = max(i.shape[1] for i in images)
+    canvas = np.zeros((len(MEGA_NAMES), Hb, Wb), dtype=np.int32)
+    for i, img in enumerate(images):
+        canvas[i, : img.shape[0], : img.shape[1]] = img
+
+    stacked = VCGRAConfig.stack(configs)
+    ingests = IngestPlan.stack([c.ingest for c in configs], MEGA_GRID.dtype)
+    ref = batched_fused_overlay_step(
+        MEGA_GRID, 1, stacked, ingests, jnp.asarray(canvas)
+    )
+    got = make_batched_fused_pallas_fn(MEGA_GRID, radius=1)(
+        stacked, ingests, jnp.asarray(canvas)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_megakernel_batched_matches_interpreter_unaligned_batch(rng):
+    """Pre-packed channel path: the pallas wrapper pads the pixel axis to a
+    lane multiple internally and slices back, so lane-unaligned batches
+    keep the XLA contract bitwise."""
+    grid = sobel_grid()
+    names = ["sobel_x", "sobel_y", "sharpen", "laplace"]
+    configs = [map_app(apps.ALL_APPS[n](), grid) for n in names]
+    x = rng.integers(0, 256, (len(names), grid.num_inputs, 45)).astype(np.int32)
+    stacked = VCGRAConfig.stack(configs)
+    ref = batched_overlay_step(grid, stacked, jnp.asarray(x))
+    got = make_batched_pallas_fn(grid)(stacked, jnp.asarray(x))
+    assert got.shape == ref.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_megakernel_casts_frames_to_grid_dtype_like_oracle(rng):
+    """Frames arriving in another dtype (float32 with fractional values on
+    an int32 grid) must be cast at ingest exactly like the XLA path's
+    ``form_tap_bank``, or the backends diverge in dtype AND values."""
+    grid = sobel_grid()
+    imgs = (rng.random((2, 6, 6)) * 256 + 0.5).astype(np.float32)
+    configs = [map_app(apps.ALL_APPS[n](), grid) for n in ["sobel_x", "threshold"]]
+    stacked = VCGRAConfig.stack(configs)
+    ingests = IngestPlan.stack([c.ingest for c in configs], grid.dtype)
+    ref = batched_fused_overlay_step(grid, 1, stacked, ingests, jnp.asarray(imgs))
+    got = make_batched_fused_pallas_fn(grid, radius=1)(stacked, ingests,
+                                                       jnp.asarray(imgs))
+    assert got.dtype == ref.dtype == grid.dtype
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_megakernel_settings_are_runtime_data(rng):
+    """Compile-once: swapping which app runs in which slot must reuse the
+    jitted megakernel executable (settings are SMEM operands, not trace
+    constants)."""
+    grid = sobel_grid()
+    img = rng.integers(0, 256, (2, 8, 8)).astype(np.int32)
+    fn = make_batched_fused_pallas_fn(grid, radius=1)
+    pair_a = [map_app(apps.ALL_APPS[n](), grid) for n in ["sobel_x", "laplace"]]
+    pair_b = [map_app(apps.ALL_APPS[n](), grid) for n in ["sobel_y", "identity"]]
+    for pair in (pair_a, pair_b):
+        got = fn(
+            VCGRAConfig.stack(pair),
+            IngestPlan.stack([c.ingest for c in pair], grid.dtype),
+            jnp.asarray(img),
+        )
+        ref = batched_fused_overlay_step(
+            grid, 1, VCGRAConfig.stack(pair),
+            IngestPlan.stack([c.ingest for c in pair], grid.dtype),
+            jnp.asarray(img),
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # The compile-once assert is the point of this test; if jax ever drops
+    # the private _cache_size introspection, skip loudly rather than let
+    # the test silently degrade to a plain parity check.
+    sizer = getattr(fn, "_cache_size", None)
+    if not callable(sizer):
+        pytest.skip("this jax version has no jit _cache_size introspection")
+    assert sizer() == 1
