@@ -184,6 +184,16 @@ def run(n_apps: int, image_hw: int, reps: int) -> dict:
     assert fleet.stats.config_cache_hits >= n_apps, fleet.stats.as_dict()
     assert fleet.stats.stack_bank_hits >= 1, fleet.stats.as_dict()
 
+    # plan-cache behavior of the fleet's overlay LRU (keyed by OverlayPlan):
+    # hit rate ~1 after warmup is the compile-once contract at fleet scale.
+    plan_lookups = fleet._overlays.hits + fleet._overlays.misses
+    plan_cache = {
+        "hits": fleet._overlays.hits,
+        "misses": fleet._overlays.misses,
+        "hit_rate": fleet._overlays.hits / plan_lookups if plan_lookups else 0.0,
+        "plans": sorted(p.key() for p in fleet._overlays._d),
+    }
+
     pixels = img.size * n_apps
     return {
         "bench": "fleet_throughput",
@@ -191,6 +201,8 @@ def run(n_apps: int, image_hw: int, reps: int) -> dict:
         "image": [image_hw, image_hw],
         "grid": grid.name,
         "apps": names,
+        "device_count": len(jax.local_devices()),
+        "plan_cache": plan_cache,
         "sequential_s_per_round": t_seq,
         "batched_s_per_round": t_bat,
         "unfused_e2e_s_per_round": t_unfused_e2e,
@@ -262,6 +274,9 @@ def main(argv=None) -> dict:
           f"x{result['speedup_e2e']:.2f} e2e   "
           f"(overlay builds={result['fleet_stats']['overlay_builds']}, "
           f"xla executables={result['overlay_executables']})")
+    print(f"  plan cache   hit rate {result['plan_cache']['hit_rate']:.2f} "
+          f"over {len(result['plan_cache']['plans'])} plans, "
+          f"{result['device_count']} device(s)")
 
     print("BENCH " + json.dumps(result))
     if a.out:

@@ -13,11 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DFG, Op, for_dfg, map_app, paper_4x4, sobel_grid
+from repro.core import DFG, Op, OverlayPlan, compile_plan, for_dfg, map_app, paper_4x4, sobel_grid
 from repro.core import applications as apps
 from repro.core.analysis import compile_and_census, format_table, reduction_row
 from repro.core.grid import custom
-from repro.core.interpreter import make_overlay_fn
 from repro.core.specialize import build_specialized_fn
 
 BATCH = 4096
@@ -26,7 +25,8 @@ BATCH = 4096
 def _census_pair(grid, config, batch=BATCH):
     x = jnp.zeros((grid.num_inputs, batch), grid.dtype)
     conv = compile_and_census(
-        lambda c, xx: make_overlay_fn(grid)(c, xx), config.to_jax(), x
+        lambda c, xx: compile_plan(OverlayPlan(grid=grid))(c, xx),
+        config.to_jax(), x
     )
     spec = compile_and_census(build_specialized_fn(grid, config), x)
     return conv, spec

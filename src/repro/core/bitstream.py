@@ -70,11 +70,11 @@ class VCGRAConfig:
         """Stack N same-grid configs into batched settings arrays.
 
         Every application mapped on one grid yields identically-shaped
-        config arrays (the invariant ``make_overlay_fn`` exploits for its
-        compile-once claim); stacking them along a new leading axis is the
-        multi-tenant extension: one vmapped overlay executable then runs N
-        *different* applications in a single dispatch
-        (``interpreter.make_batched_overlay_fn``).
+        config arrays (the invariant the overlay executors exploit for
+        their compile-once claim); stacking them along a new leading axis
+        is the multi-tenant extension: one vmapped overlay executable then
+        runs N *different* applications in a single dispatch (a batched
+        ``OverlayPlan``, see ``core/plan.py``).
 
         Returns ``(opcodes, selects, out_sel)`` with per-level leaves of
         shape ``[N, pes]`` / ``[N, pes, 2]`` and ``out_sel: [N, num_outputs]``.

@@ -12,7 +12,7 @@ map time, the *production rule* for every channel of an application:
   zero           an unused (padding) channel of the grid's memory VC
 
 so the whole ingest can move inside the jitted overlay dispatch
-(``interpreter.make_fused_overlay_fn``).  Crucially the plan compiles to
+(a fused :class:`repro.core.plan.OverlayPlan`).  Crucially the plan compiles to
 **runtime settings arrays**, not trace-time structure: the fused executable
 forms one tap bank per frame from trace-time-constant offsets (static
 slices -- see DESIGN.md "Fused device-side ingest"), and each channel

@@ -21,16 +21,20 @@ both of which the parameterized path (``specialize.py``) folds away.
 
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import ops as pe_ops
 from repro.core.bitstream import VCGRAConfig
 from repro.core.grid import GridSpec
 from repro.core.ingest import IngestPlan, tap_offsets
+
+# Padding/bucketing primitives live in core/tiling.py (one source of truth
+# shared with the plan compiler and the fleet scheduler); re-exported here
+# because this module is their historical home.
+from repro.core.tiling import pad_batches, pad_channels  # noqa: F401
 
 ConfigArrays = Tuple[Tuple[jnp.ndarray, ...], Tuple[jnp.ndarray, ...], jnp.ndarray]
 IngestArrays = Tuple[jnp.ndarray, jnp.ndarray]  # (tap_sel, const_vals)
@@ -110,15 +114,34 @@ def overlay_step(
     return jnp.take(x, out_sel, axis=0)
 
 
+def _deprecated_factory(name: str, plan) -> "object":
+    """Shared body of the legacy ``make_*_overlay_fn`` shims: warn, then
+    delegate to the unified plan pipeline.  The returned
+    ``OverlayExecutable`` is callable with the exact legacy signature and
+    bitwise-identical (it wraps the very same step function)."""
+    from repro.core.plan import compile_plan
+
+    warnings.warn(
+        f"{name} is deprecated; build an OverlayPlan and call "
+        "repro.core.plan.compile_plan(plan) instead (one entrypoint for "
+        "the whole fusion x batching x backend x devices matrix)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    return compile_plan(plan)
+
+
 def make_overlay_fn(grid: GridSpec):
-    """Build the jit-once overlay executor for a grid structure.
+    """Deprecated: use ``compile_plan(OverlayPlan(grid=grid))``.
 
     Returns ``fn(config_arrays, x) -> y`` with
     ``x: [num_inputs, batch] -> y: [num_outputs, batch]``.
     Different applications = different `config_arrays` of identical shapes
     => a single XLA executable serves them all.
     """
-    return jax.jit(partial(overlay_step, grid))
+    from repro.core.plan import OverlayPlan
+
+    return _deprecated_factory("make_overlay_fn", OverlayPlan(grid=grid))
 
 
 def batched_overlay_step(
@@ -156,7 +179,8 @@ def batched_overlay_step(
 
 
 def make_batched_overlay_fn(grid: GridSpec, backend: str = "xla"):
-    """Build the jit-once *multi-tenant* overlay executor for a grid.
+    """Deprecated: use ``compile_plan(OverlayPlan(grid=grid, batched=True,
+    backend=backend))``.
 
     Returns ``fn(stacked_configs, xs) -> ys`` with
     ``xs: [N, num_inputs, batch] -> ys: [N, num_outputs, batch]``.
@@ -164,16 +188,13 @@ def make_batched_overlay_fn(grid: GridSpec, backend: str = "xla"):
     structure and the (N, batch) shape -- any N applications mapped on the
     grid share it, so a fleet scheduler that pads to fixed (N, batch) tiles
     compiles exactly once per (grid, backend).
-
-    ``backend="pallas"`` returns the batched VCGRA kernel with the same
-    signature and bitwise-identical outputs (settings scalar-prefetched to
-    SMEM instead of gathered); the XLA path stays the oracle.
     """
-    if check_backend(backend) == "pallas":
-        from repro.kernels.vcgra.ops import make_batched_pallas_fn
+    from repro.core.plan import OverlayPlan
 
-        return make_batched_pallas_fn(grid)
-    return jax.jit(partial(batched_overlay_step, grid))
+    return _deprecated_factory(
+        "make_batched_overlay_fn",
+        OverlayPlan(grid=grid, batched=True, backend=backend),
+    )
 
 
 # -- fused device-side ingest (line buffers inside the dispatch) --------------
@@ -228,14 +249,20 @@ def fused_overlay_step(
 
 
 def make_fused_overlay_fn(grid: GridSpec, radius: int = 1):
-    """Build the jit-once *fused-ingest* overlay executor for a grid.
+    """Deprecated: use ``compile_plan(OverlayPlan(grid=grid, fused=True,
+    radius=radius))``.
 
     Returns ``fn(config_arrays, ingest_arrays, image) -> y`` with
     ``image: [H, W] -> y: [num_outputs, H*W]``.  Like
     :func:`make_overlay_fn` the executable depends only on the grid
     structure (plus the stencil radius and frame shape): tap offsets are
     trace-time constants, tap *selection* is runtime data."""
-    return jax.jit(partial(fused_overlay_step, grid, radius))
+    from repro.core.plan import OverlayPlan
+
+    return _deprecated_factory(
+        "make_fused_overlay_fn",
+        OverlayPlan(grid=grid, fused=True, radius=radius),
+    )
 
 
 def batched_fused_overlay_step(
@@ -263,22 +290,20 @@ def batched_fused_overlay_step(
 
 def make_batched_fused_overlay_fn(grid: GridSpec, radius: int = 1,
                                   backend: str = "xla"):
-    """Build the jit-once *multi-tenant fused-ingest* overlay executor.
+    """Deprecated: use ``compile_plan(OverlayPlan(grid=grid, batched=True,
+    fused=True, radius=radius, backend=backend))``.
 
     Returns ``fn(stacked_configs, stacked_ingests, images) -> ys`` with
     ``images: [N, H, W] -> ys: [N, num_outputs, H*W]``.  One executable
     per (grid, radius, backend, N, H, W); a fleet that pads N and the
-    frame canvas to fixed tiles compiles exactly once per grid.
+    frame canvas to fixed tiles compiles exactly once per grid."""
+    from repro.core.plan import OverlayPlan
 
-    ``backend="pallas"`` returns the batched fused-ingest *megakernel*
-    (``repro.kernels.vcgra.vcgra_fused_batched``): tap-bank formation,
-    settings-gathered VC muxing and PE execution all inside one
-    pallas_call, same signature, bitwise-identical outputs."""
-    if check_backend(backend) == "pallas":
-        from repro.kernels.vcgra.ops import make_batched_fused_pallas_fn
-
-        return make_batched_fused_pallas_fn(grid, radius)
-    return jax.jit(partial(batched_fused_overlay_step, grid, radius))
+    return _deprecated_factory(
+        "make_batched_fused_overlay_fn",
+        OverlayPlan(grid=grid, batched=True, fused=True, radius=radius,
+                    backend=backend),
+    )
 
 
 def run_app_fused(
@@ -295,31 +320,15 @@ def run_app_fused(
             f"app {config.app_name!r} has no ingest plan (a channel is "
             "neither a stencil tap nor a const); use the named-channel path"
         )
-    fn = fused_fn or make_fused_overlay_fn(grid, config.ingest.radius)
-    return fn(config.to_jax(), config.ingest.to_jax(grid.dtype), jnp.asarray(image))
+    if fused_fn is None:
+        from repro.core.plan import OverlayPlan, compile_plan
 
-
-def pad_channels(x: jnp.ndarray, num_inputs: int) -> jnp.ndarray:
-    """Zero-pad the channel axis of ``x: [k, batch]`` up to the grid's
-    memory-VC width.  Applications rarely use every memory channel; mux
-    selects never reference the padded rows, so batching apps with
-    different input counts on one grid stays exact."""
-    k = x.shape[0]
-    if k > num_inputs:
-        raise ValueError(f"app uses {k} input channels, grid has {num_inputs}")
-    if k == num_inputs:
-        return x
-    return jnp.concatenate(
-        [x, jnp.zeros((num_inputs - k,) + x.shape[1:], x.dtype)], axis=0
+        fused_fn = compile_plan(
+            OverlayPlan(grid=grid, fused=True, radius=config.ingest.radius)
+        )
+    return fused_fn(
+        config.to_jax(), config.ingest.to_jax(grid.dtype), jnp.asarray(image)
     )
-
-
-def pad_batches(xs, pad_to: int):
-    """Zero-pad every ``[channels, batch]`` input to ``pad_to`` columns."""
-    return [
-        jnp.pad(x, ((0, 0), (0, pad_to - x.shape[-1]))) if x.shape[-1] < pad_to else x
-        for x in xs
-    ]
 
 
 def stack_for_dispatch(configs, xs, batch_pad=None):
@@ -347,7 +356,11 @@ def run_app(
 ) -> Dict[int, jnp.ndarray]:
     """Convenience one-shot execution (packs inputs, runs, unpacks)."""
     dtype = grid.dtype
-    fn = overlay_fn or make_overlay_fn(grid)
+    if overlay_fn is None:
+        from repro.core.plan import OverlayPlan, compile_plan
+
+        overlay_fn = compile_plan(OverlayPlan(grid=grid))
+    fn = overlay_fn
     x = pack_inputs(config, inputs, dtype)
     y = fn(config.to_jax(), x)
     return {k: y[k] for k in range(y.shape[0])}

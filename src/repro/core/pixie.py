@@ -28,6 +28,7 @@ from repro.core.bitstream import VCGRAConfig, assemble
 from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
 from repro.core.place import place
+from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan
 from repro.core.route import route
 
 
@@ -47,6 +48,14 @@ class Pixie:
     mode='parameterized' settings are baked constants; reconfiguration
                          re-specializes (re-jits) but executes a leaner
                          datapath (paper's TLUT/TCON flow).
+
+    ``backend`` ("xla" | "pallas") and ``devices`` select the execution
+    backend and app-axis device sharding of every conventional-mode
+    dispatch -- the same plan axes the fleet exposes, so single-app users
+    can exercise the pallas megakernels (or a mesh) without constructing
+    a ``PixieFleet``.  Only conventional mode takes them (the
+    parameterized path bakes one app into one XLA executable by
+    construction).
     """
 
     def __init__(
@@ -54,20 +63,42 @@ class Pixie:
         grid: GridSpec,
         mode: str = "conventional",
         bake_consts: bool = False,
+        backend: str = "xla",
+        devices: Optional[int] = None,
     ):
         if mode not in ("conventional", "parameterized"):
             raise ValueError(f"unknown mode {mode!r}")
+        interpreter.check_backend(backend)
+        devices = 1 if devices is None else int(devices)
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        if mode == "parameterized" and (backend != "xla" or devices != 1):
+            raise ValueError(
+                "backend=/devices= apply to the conventional overlay plans "
+                "only; the parameterized path specializes per app"
+            )
         self.grid = grid
         self.mode = mode
         self.bake_consts = bake_consts
+        self.backend = backend
+        self.devices = devices
         self.config: Optional[VCGRAConfig] = None
-        self._overlay_fn: Optional[Callable] = None
-        self._batched_overlay_fn: Optional[Callable] = None
-        self._fused_fns: Dict[int, Callable] = {}  # stencil radius -> jitted fn
+        self._overlay_fn: Optional[OverlayExecutable] = None
+        self._batched_overlay_fn: Optional[OverlayExecutable] = None
+        self._fused_fns: Dict[int, OverlayExecutable] = {}  # radius -> executable
         self._config_jax = None
         self._ingest_jax = None
         self._spec_fn: Optional[Callable] = None
         self.timings: Dict[str, float] = {}
+
+    def _plan(self, *, batched: bool = False, fused: bool = False,
+              radius: Optional[int] = None) -> OverlayPlan:
+        """This instance's corner of the plan matrix (devices only shard
+        batched dispatch -- single-app plans have no app axis)."""
+        return OverlayPlan(
+            grid=self.grid, batched=batched, fused=fused, radius=radius,
+            backend=self.backend, devices=self.devices if batched else 1,
+        )
 
     # -- stage 1: overlay compile (the "1200 s" FPGA-compile analogue) ------
 
@@ -75,7 +106,7 @@ class Pixie:
         """AOT-compile the generic interpreter for this grid structure.
         Only meaningful (and only needed) in conventional mode."""
         t0 = time.perf_counter()
-        self._overlay_fn = interpreter.make_overlay_fn(self.grid)
+        self._overlay_fn = compile_plan(self._plan())
         if self.mode == "conventional":
             dummy_cfg = self._dummy_config().to_jax()
             x = jnp.zeros((self.grid.num_inputs, batch), self.grid.dtype)
@@ -169,7 +200,9 @@ class Pixie:
         largest request) so repeated calls reuse one compiled executable;
         defaults to the largest batch in this call.  Ragged requests are
         zero-padded and the outputs sliced back, so results are bitwise
-        identical to N sequential runs.
+        identical to N sequential runs.  The dispatch runs on this
+        instance's ``backend`` and, when ``devices > 1``, shards the app
+        axis over a local device mesh (bitwise-equal either way).
 
         Returns one ``[num_outputs, batch_i]`` array per request, in order.
         """
@@ -195,7 +228,7 @@ class Pixie:
             configs, xs, batch_pad
         )
         if self._batched_overlay_fn is None:
-            self._batched_overlay_fn = interpreter.make_batched_overlay_fn(self.grid)
+            self._batched_overlay_fn = compile_plan(self._plan(batched=True))
         t0 = time.perf_counter()
         ys = jax.block_until_ready(self._batched_overlay_fn(stacked, xstack))
         self.timings["run_many_s"] = time.perf_counter() - t0
@@ -206,8 +239,8 @@ class Pixie:
 
         Conventional mode takes the fused-ingest path: line-buffer
         formation (tap slices) + pack + dispatch are one jitted executable
-        (``interpreter.make_fused_overlay_fn``), shared by every app mapped
-        on the grid.  The parameterized mode (and apps without an ingest
+        (a fused ``OverlayPlan`` on this instance's backend), shared by
+        every app mapped on the grid.  The parameterized mode (and apps without an ingest
         plan) falls back to the host-side two-step path, which stays
         available as the oracle the fused path is tested against.
         """
@@ -217,8 +250,8 @@ class Pixie:
         if self.mode == "conventional" and self.config.ingest is not None:
             radius = self.config.ingest.radius
             if radius not in self._fused_fns:
-                self._fused_fns[radius] = interpreter.make_fused_overlay_fn(
-                    self.grid, radius
+                self._fused_fns[radius] = compile_plan(
+                    self._plan(fused=True, radius=radius)
                 )
             # Settings were converted to device arrays once at load();
             # per-frame cost is the single fused dispatch, nothing else.
@@ -232,7 +265,9 @@ class Pixie:
         return y.reshape((-1, H, W))[0] if y.shape[0] == 1 else y.reshape((-1, H, W))
 
 
-def sobel_pixie(mode: str = "conventional", data_bits: int = 32) -> Pixie:
+def sobel_pixie(mode: str = "conventional", data_bits: int = 32,
+                backend: str = "xla") -> Pixie:
     """The paper's demonstrator: Sobel on the 45-PE/4-VC grid (Sec. IV)."""
-    pix = Pixie(gridlib.sobel_grid(data_bits=data_bits), mode=mode)
+    pix = Pixie(gridlib.sobel_grid(data_bits=data_bits), mode=mode,
+                backend=backend)
     return pix

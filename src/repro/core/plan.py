@@ -1,0 +1,249 @@
+"""OverlayPlan: the unified compile/dispatch pipeline for the overlay.
+
+The paper's value proposition is ONE virtual overlay that many
+applications reconfigure cheaply at runtime; the runtime realizes it, but
+the "compile an overlay" surface had grown into a 2x2x2 matrix of factory
+functions (``make_*_overlay_fn`` x ``backend``) that every layer
+re-plumbed by hand.  This module collapses that matrix into a single
+plan -> compile -> execute pipeline:
+
+  OverlayPlan      a frozen, hashable description of one dispatch: grid
+                   structure, fused-vs-channel ingest (+ tap radius),
+                   single-vs-batched app axis, execution backend, device
+                   placement.  It is THE cache key: the fleet's overlay
+                   LRU, benchmark JSON and stats all name executables by
+                   their plan.
+  compile_plan     the one entrypoint: plan -> OverlayExecutable.  Looks
+                   the executor builder up in a registry (XLA builders
+                   registered here; the Pallas megakernels register
+                   themselves from ``kernels/vcgra/ops.py``), wraps it
+                   with app-axis mesh sharding when the plan asks for
+                   devices > 1, and jits once.
+  OverlayExecutable  the compiled artifact: callable with the plan-shaped
+                   operands, carries its plan and (when sharded) mesh.
+
+Device placement: ``devices=k`` shards the app (N) axis of a *batched*
+plan across the first k local devices via shard_map
+(``parallel/axes.app_mesh`` / ``shard_apps``).  The app axis is
+embarrassingly parallel -- each tenant's flat-gather offsets are local to
+its own rows -- so the sharded result is bitwise identical to the
+single-device run; when the host has fewer devices than the plan asks
+for, compilation falls back to the single-device executable (same bits,
+same plan key).  N not divisible by k is padded inside the executable by
+replaying the last app and sliced back off.
+
+The legacy ``interpreter.make_*_overlay_fn`` factories survive as thin
+deprecated shims delegating here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import interpreter
+from repro.core.grid import GridSpec
+from repro.parallel.axes import app_mesh, shard_apps
+
+#: Execution backends a plan may name (re-exported from the interpreter,
+#: which owns the validation shared with the fleet and the front-end).
+BACKENDS = interpreter.BACKENDS
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlayPlan:
+    """A frozen, hashable description of one overlay dispatch.
+
+    Axes (the former factory-function matrix, now data):
+
+    * ``grid``     the overlay structure (trace-time constants);
+    * ``batched``  single app (``[C, batch]`` channels / ``[H, W]``
+      frame) vs N stacked tenants (leading app axis on every operand);
+    * ``fused``    raw-frame ingest (line buffers formed inside the
+      dispatch, tap bank of ``radius``) vs pre-packed channels;
+    * ``backend``  "xla" (the hand-lowered interpreter, the bitwise
+      oracle) or "pallas" (the VCGRA megakernels);
+    * ``devices``  how many local devices the app axis is sharded over
+      (1 = no mesh; >1 requires ``batched``).
+
+    Two dispatches with equal plans share one compiled executable; any
+    layer that caches executables keys on the plan itself.
+    """
+
+    grid: GridSpec
+    batched: bool = False
+    fused: bool = False
+    radius: Optional[int] = None     # tap-bank radius; fused plans only
+    backend: str = "xla"
+    devices: int = 1
+
+    def __post_init__(self):
+        interpreter.check_backend(self.backend)
+        if self.fused:
+            # Canonical key: a fused plan always names its radius.
+            object.__setattr__(
+                self, "radius", 1 if self.radius is None else int(self.radius)
+            )
+            if self.radius < 1:
+                raise ValueError(f"fused plan needs radius >= 1, got {self.radius}")
+        elif self.radius is not None:
+            raise ValueError(
+                f"radius={self.radius} is meaningless for an unfused plan "
+                "(the tap bank only exists on the fused ingest path)"
+            )
+        if self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if self.devices > 1 and not self.batched:
+            raise ValueError(
+                "devices > 1 shards the app (N) axis, which only batched "
+                "plans have; set batched=True or devices=1"
+            )
+
+    def key(self) -> str:
+        """Compact human-readable identity, used by stats stamping and
+        bench JSON (``FleetStats.dispatch_plans``)."""
+        return "|".join([
+            self.grid.name,
+            "batched" if self.batched else "single",
+            f"fused:r{self.radius}" if self.fused else "channels",
+            self.backend,
+            f"dev{self.devices}",
+        ])
+
+
+class OverlayExecutable:
+    """The compiled artifact of one :class:`OverlayPlan`.
+
+    Callable with the plan-shaped operands:
+
+      batched=False, fused=False   fn(config_arrays, x)
+      batched=False, fused=True    fn(config_arrays, ingest_arrays, image)
+      batched=True,  fused=False   fn(stacked_configs, xs)
+      batched=True,  fused=True    fn(stacked_configs, stacked_ingests, images)
+
+    ``mesh`` is the device mesh the app axis is sharded over, or None for
+    the single-device path (including the fallback when the host could
+    not honor ``plan.devices``).
+    """
+
+    def __init__(self, plan: OverlayPlan, fn: Callable, mesh=None):
+        self.plan = plan
+        self._fn = fn
+        self.mesh = mesh
+        # Forward jit-cache introspection when the running jax has it
+        # (fleet.overlay_executable_count uses it for compile-once asserts).
+        sizer = getattr(fn, "_cache_size", None)
+        if callable(sizer):
+            self._cache_size = sizer
+
+    def __call__(self, *args):
+        return self._fn(*args)
+
+    def lower(self, *args):
+        """AOT lowering passthrough (``Pixie.compile_overlay`` times it)."""
+        return self._fn.lower(*args)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"OverlayExecutable({self.plan.key()})"
+
+
+# -- executor registry ---------------------------------------------------------
+
+ExecutorBuilder = Callable[[OverlayPlan], Callable]
+_EXECUTOR_BUILDERS: Dict[Tuple[str, bool, bool], ExecutorBuilder] = {}
+
+
+def register_executor(backend: str, *, batched: bool, fused: bool):
+    """Register the executor builder for one (backend, batched, fused)
+    cell of the plan matrix.  The builder takes the plan and returns an
+    (unjitted or jitted) callable with the plan-shaped operands;
+    ``compile_plan`` applies sharding and the outer jit.  The XLA cells
+    are registered below; ``kernels/vcgra/ops.py`` registers the pallas
+    cells on import so the kernel package owns its own dispatch wiring
+    instead of being special-cased here."""
+
+    def deco(builder: ExecutorBuilder) -> ExecutorBuilder:
+        _EXECUTOR_BUILDERS[(interpreter.check_backend(backend), batched, fused)] = builder
+        return builder
+
+    return deco
+
+
+@register_executor("xla", batched=False, fused=False)
+def _xla_single(plan: OverlayPlan) -> Callable:
+    return partial(interpreter.overlay_step, plan.grid)
+
+
+@register_executor("xla", batched=False, fused=True)
+def _xla_single_fused(plan: OverlayPlan) -> Callable:
+    return partial(interpreter.fused_overlay_step, plan.grid, plan.radius)
+
+
+@register_executor("xla", batched=True, fused=False)
+def _xla_batched(plan: OverlayPlan) -> Callable:
+    return partial(interpreter.batched_overlay_step, plan.grid)
+
+
+@register_executor("xla", batched=True, fused=True)
+def _xla_batched_fused(plan: OverlayPlan) -> Callable:
+    return partial(interpreter.batched_fused_overlay_step, plan.grid, plan.radius)
+
+
+# -- the compile pipeline ------------------------------------------------------
+
+
+def _with_app_padding(fn: Callable, devices: int) -> Callable:
+    """Pad the app axis of every operand to a multiple of the mesh size
+    (replaying the last app -- always a valid config on valid inputs, so
+    no NaN/garbage risk) and slice the output back.  Shapes are static
+    under jit, so the pad amount is a trace-time constant and the padded
+    executable is still compile-once per operand shape."""
+
+    def padded(*args):
+        n = jax.tree_util.tree_leaves(args[-1])[0].shape[0]
+        pad = (-n) % devices
+        if not pad:
+            return fn(*args)
+        args = jax.tree_util.tree_map(
+            lambda a: jnp.concatenate(
+                [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])], axis=0
+            ),
+            args,
+        )
+        return fn(*args)[:n]
+
+    return padded
+
+
+def compile_plan(plan: OverlayPlan) -> OverlayExecutable:
+    """THE overlay compile entrypoint: plan -> jitted executable.
+
+    Subsumes the former ``make_overlay_fn`` / ``make_batched_overlay_fn``
+    / ``make_fused_overlay_fn`` / ``make_batched_fused_overlay_fn`` x
+    backend matrix (those survive as deprecated shims delegating here).
+    Builds the backend's executor, wraps it in app-axis ``shard_map``
+    when ``plan.devices > 1`` and a mesh is available (single-device
+    bitwise fallback otherwise), and jits exactly once.
+    """
+    if plan.backend == "pallas":
+        # Importing the kernel package registers its plan executors.
+        import repro.kernels.vcgra.ops  # noqa: F401
+
+    builder = _EXECUTOR_BUILDERS.get((plan.backend, plan.batched, plan.fused))
+    if builder is None:  # pragma: no cover - registry covers the full matrix
+        raise ValueError(f"no executor registered for plan {plan.key()}")
+    fn = builder(plan)
+
+    mesh = None
+    if plan.devices > 1:
+        mesh = app_mesh(plan.devices)
+        if mesh is not None:
+            num_args = 3 if plan.fused else 2
+            fn = _with_app_padding(
+                shard_apps(fn, mesh, num_args), plan.devices
+            )
+    return OverlayExecutable(plan, jax.jit(fn), mesh=mesh)

@@ -1,0 +1,55 @@
+"""Shared padding/bucketing primitives for overlay dispatch tiling.
+
+Every layer that shapes a dispatch -- the plan compiler
+(``core/plan.py``), the fleet scheduler (``runtime/fleet.py``) and the
+interpreter's pack helpers -- rounds to the same tiles from the same
+module, so the compile-once contract ("one executable per padded tile
+shape") has a single source of truth.  All padding here is *exact* by
+construction: padded channels are never referenced by mux selects,
+padded pixel columns are sliced off, and padded app slots replay an
+already-valid config whose outputs are discarded.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+
+def round_up(n: int, tile: int) -> int:
+    """Smallest multiple of ``tile`` that is >= ``n``."""
+    return ((n + tile - 1) // tile) * tile
+
+
+def pow2_bucket(n: int, floor: int) -> int:
+    """Smallest power-of-two multiple of ``floor`` that is >= ``n``
+    (``floor`` itself for small ``n``) -- the fleet's pixel/canvas bucket
+    rule, bounding distinct compiled shapes to O(log max_size)."""
+    b = max(floor, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_channels(x: jnp.ndarray, num_inputs: int) -> jnp.ndarray:
+    """Zero-pad the channel axis of ``x: [k, batch]`` up to the grid's
+    memory-VC width.  Applications rarely use every memory channel; mux
+    selects never reference the padded rows, so batching apps with
+    different input counts on one grid stays exact."""
+    k = x.shape[0]
+    if k > num_inputs:
+        raise ValueError(f"app uses {k} input channels, grid has {num_inputs}")
+    if k == num_inputs:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((num_inputs - k,) + x.shape[1:], x.dtype)], axis=0
+    )
+
+
+def pad_batches(xs: Sequence[jnp.ndarray], pad_to: int) -> List[jnp.ndarray]:
+    """Zero-pad every ``[channels, batch]`` input to ``pad_to`` columns."""
+    return [
+        jnp.pad(x, ((0, 0), (0, pad_to - x.shape[-1]))) if x.shape[-1] < pad_to else x
+        for x in xs
+    ]

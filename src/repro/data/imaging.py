@@ -22,7 +22,8 @@ import numpy as np
 from repro.core import applications as apps
 from repro.core import for_dfg, map_app
 from repro.core.grid import GridSpec, rectangular
-from repro.core.interpreter import make_fused_overlay_fn, make_overlay_fn, pack_inputs
+from repro.core.interpreter import pack_inputs
+from repro.core.plan import OverlayPlan, compile_plan
 
 
 def synthetic_images(batch: int, hw, seed: int = 0) -> np.ndarray:
@@ -60,8 +61,10 @@ class PixiePreprocessor:
         # jitted executable; reconfigure swaps settings (config + ingest
         # plan arrays), never recompiles.  The unfused overlay stays
         # available for apps without an ingest plan.
-        self.overlay = make_overlay_fn(self.grid)
-        self.fused_overlay = make_fused_overlay_fn(self.grid)
+        self.overlay = compile_plan(OverlayPlan(grid=self.grid))
+        self.fused_overlay = compile_plan(
+            OverlayPlan(grid=self.grid, fused=True, radius=1)
+        )
         self.configs = {name: map_app(g, self.grid) for name, g in dfgs.items()}
         self.active = self.filters[0]
 

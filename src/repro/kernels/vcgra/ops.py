@@ -20,6 +20,7 @@ from repro.core import applications as apps
 from repro.core.bitstream import VCGRAConfig
 from repro.core.grid import GridSpec
 from repro.core.interpreter import apply_ingest, form_tap_bank, pack_inputs
+from repro.core.plan import OverlayPlan, register_executor
 from repro.kernels.vcgra.vcgra_kernel import (
     LANE,
     _pack_settings,
@@ -80,11 +81,13 @@ def pack_settings_batched(grid: GridSpec, stacked_configs):
     return ops_d, sel_d, jnp.asarray(out_sel, jnp.int32)
 
 
-def make_batched_fused_pallas_fn(grid: GridSpec, radius: int = 1,
-                                 interpret=None):
-    """Build the jit-once batched fused-ingest *megakernel* executor.
+def _batched_fused_pallas_fn(grid: GridSpec, radius: int = 1, interpret=None):
+    """Unjitted batched fused-ingest *megakernel* executor (the plan
+    builders return this so ``compile_plan`` applies the single outer
+    jit; :func:`make_batched_fused_pallas_fn` is the jitted standalone).
 
-    Drop-in signature twin of ``interpreter.make_batched_fused_overlay_fn``:
+    Signature twin of the XLA batched fused-ingest plan executor
+    (``interpreter.batched_fused_overlay_step``):
     ``fn(stacked_configs, stacked_ingests, images) -> ys`` with
     ``images: [N, H, W] -> ys: [N, num_outputs, H*W]``.  Settings and
     ingest plans are runtime operands (scalar-prefetched to SMEM), so one
@@ -101,14 +104,20 @@ def make_batched_fused_pallas_fn(grid: GridSpec, radius: int = 1,
             images, interpret=interpret,
         )
 
-    return jax.jit(fn)
+    return fn
 
 
-def make_batched_pallas_fn(grid: GridSpec, block_n: int = LANE, interpret=None):
-    """Build the jit-once batched (pre-packed channels) kernel executor --
-    the Pallas twin of ``interpreter.make_batched_overlay_fn``:
+def make_batched_fused_pallas_fn(grid: GridSpec, radius: int = 1,
+                                 interpret=None):
+    """Jit-once standalone form of :func:`_batched_fused_pallas_fn`."""
+    return jax.jit(_batched_fused_pallas_fn(grid, radius, interpret))
+
+
+def _batched_pallas_fn(grid: GridSpec, block_n: int = LANE, interpret=None):
+    """Unjitted batched (pre-packed channels) kernel executor -- the
+    Pallas twin of ``interpreter.batched_overlay_step``:
     ``fn(stacked_configs, xs) -> ys`` with ``xs: [N, num_inputs, B]``.
-    The pixel axis is padded to a ``block_n`` multiple inside the jitted
+    The pixel axis is padded to a ``block_n`` multiple inside the
     function and sliced back, so callers keep the XLA path's contract."""
 
     def fn(stacked_configs, xs):
@@ -121,7 +130,57 @@ def make_batched_pallas_fn(grid: GridSpec, block_n: int = LANE, interpret=None):
                            interpret=interpret)
         return ys[:, :, :b]
 
-    return jax.jit(fn)
+    return fn
+
+
+def make_batched_pallas_fn(grid: GridSpec, block_n: int = LANE, interpret=None):
+    """Jit-once standalone form of :func:`_batched_pallas_fn`."""
+    return jax.jit(_batched_pallas_fn(grid, block_n, interpret))
+
+
+# -- plan executors ------------------------------------------------------------
+# The kernel package registers its own cells of the OverlayPlan matrix
+# (instead of being special-cased inside core/interpreter.py):
+# ``compile_plan`` imports this module lazily for backend="pallas".
+
+
+@register_executor("pallas", batched=True, fused=True)
+def _plan_batched_fused(plan: OverlayPlan):
+    return _batched_fused_pallas_fn(plan.grid, plan.radius)
+
+
+@register_executor("pallas", batched=True, fused=False)
+def _plan_batched(plan: OverlayPlan):
+    return _batched_pallas_fn(plan.grid)
+
+
+def _lift_app_axis(tree):
+    """Add a leading N=1 app axis to every leaf (single-app adapter)."""
+    return jax.tree_util.tree_map(lambda a: a[None], tree)
+
+
+@register_executor("pallas", batched=False, fused=False)
+def _plan_single(plan: OverlayPlan):
+    """Single-app pallas execution rides the batched kernel with N=1 (the
+    megakernels are the only settings-as-runtime-data pallas path; a
+    dedicated single-app kernel would re-specialize per app)."""
+    batched = _batched_pallas_fn(plan.grid)
+
+    def fn(config, x):
+        return batched(_lift_app_axis(config), x[None])[0]
+
+    return fn
+
+
+@register_executor("pallas", batched=False, fused=True)
+def _plan_single_fused(plan: OverlayPlan):
+    batched = _batched_fused_pallas_fn(plan.grid, plan.radius)
+
+    def fn(config, ingest, image):
+        return batched(_lift_app_axis(config), _lift_app_axis(ingest),
+                       image[None])[0]
+
+    return fn
 
 
 def vcgra_apply(

@@ -306,7 +306,7 @@ def vcgra_fused_batched(
 ) -> jnp.ndarray:
     """Batched fused-ingest megakernel: N raw frames, N tenants, ONE
     pallas_call -- the Pallas twin of
-    ``interpreter.make_batched_fused_overlay_fn``.
+    ``interpreter.batched_fused_overlay_step``.
 
     ``settings``: dense banks (ops [N, L, max_w], sel [N, L, max_w, 2],
     out_sel [N, K]); ``ingests``: (tap_sel int32 [N, C], const_vals [N, C]

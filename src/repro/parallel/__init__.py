@@ -1,7 +1,9 @@
+from repro.parallel.axes import app_mesh, constrain, shard_apps
 from repro.parallel.sharding import (
     ShardingPlan, choose_attn_mode, data_axes, make_plan, model_size,
 )
 
 __all__ = [
-    "ShardingPlan", "choose_attn_mode", "data_axes", "make_plan", "model_size",
+    "ShardingPlan", "app_mesh", "choose_attn_mode", "constrain", "data_axes",
+    "make_plan", "model_size", "shard_apps",
 ]

@@ -4,14 +4,22 @@
 ``with_sharding_constraint`` against the ambient mesh (the ``with mesh:``
 context used by the dry-run and the real launcher); under no mesh (CPU
 unit tests) it is the identity, so model code can sprinkle constraints
-freely."""
+freely.
+
+The overlay dispatch pipeline (``core/plan.py``) uses the app-axis
+helpers below: ``app_mesh`` builds a 1-D mesh over local devices (None
+when the host cannot honor it -- the single-device bitwise fallback) and
+``shard_apps`` wraps a batched overlay executor in ``shard_map`` over the
+leading app (N) axis of every operand and output."""
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import functools
+from typing import Callable, Optional, Tuple
 
 import jax
-from jax.sharding import PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def _ambient_mesh():
@@ -45,6 +53,55 @@ def constrain(x, *logical_axes: Optional[str]):
         raise ValueError(f"spec {logical_axes} vs rank {x.ndim}")
     spec = P(*(_resolve(a, mesh) for a in logical_axes))
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+# -- app-axis sharding for the overlay dispatch pipeline ----------------------
+
+APP_AXIS = "app"
+
+
+def _shard_map_impl():
+    """Version-compat shard_map (same dance as models/moe.py): jax>=0.6
+    exposes jax.shard_map (check_vma), older jax ships it under
+    jax.experimental (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return functools.partial(jax.shard_map, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return functools.partial(_shard_map, check_rep=False)
+
+
+def app_mesh(devices: int, axis: str = APP_AXIS) -> Optional[Mesh]:
+    """A 1-D mesh over the first ``devices`` local devices, for sharding
+    the app (N) axis of batched overlay dispatch.
+
+    Returns ``None`` when ``devices <= 1`` or the host has fewer local
+    devices than requested -- callers fall back to the single-device
+    path, which is bitwise identical (the app axis is embarrassingly
+    parallel), so a plan asking for more parallelism than the host offers
+    degrades instead of erroring, mirroring :func:`constrain`.
+    """
+    if devices <= 1:
+        return None
+    avail = jax.local_devices()
+    if len(avail) < devices:
+        return None
+    return Mesh(np.asarray(avail[:devices]), (axis,))
+
+
+def shard_apps(fn: Callable, mesh: Mesh, num_args: int,
+               axis: str = APP_AXIS) -> Callable:
+    """shard_map ``fn`` over the leading app axis of all ``num_args``
+    operands (pytrees whose every leaf carries a leading N) and of the
+    output.  The per-app computation of the batched overlay executors is
+    independent along N (the flat-gather offsets are local to each app),
+    so sharded outputs are bitwise identical to the single-device run.
+    Callers must pad N to a multiple of the mesh size first
+    (``plan._with_app_padding``)."""
+    spec = P(axis)
+    return _shard_map_impl()(
+        fn, mesh=mesh, in_specs=(spec,) * num_args, out_specs=spec
+    )
 
 
 def constrain_time_mixer(x):

@@ -6,8 +6,11 @@ application mapped onto it.  This module pushes the amortization one step
 further: because every application mapped on a grid yields
 identically-shaped settings arrays, N *different* tenants can be stacked
 (``VCGRAConfig.stack``) and executed by one vmapped overlay executable in
-a single dispatch (``interpreter.make_batched_overlay_fn``) -- the
-serving-throughput analogue of resident multi-context bitstreams.
+a single dispatch (a batched :class:`repro.core.plan.OverlayPlan`
+compiled once by ``compile_plan``) -- the serving-throughput analogue of
+resident multi-context bitstreams.  With ``devices=k`` the plan
+additionally shards the app axis of every dispatch over k local devices
+(bitwise-equal to the single-device run).
 
 Scheduling model:
 
@@ -17,7 +20,7 @@ Scheduling model:
   share an executable;
 * image requests take the **fused-ingest** path: the raw frame is kept at
   submit time and line-buffer formation (stencil tap slices) happens
-  *inside* the batched dispatch (``interpreter.make_batched_fused_overlay_fn``)
+  *inside* the batched dispatch (a fused batched ``OverlayPlan``)
   -- pack + dispatch + unpack are one executable, with per-app
   :class:`repro.core.ingest.IngestPlan` settings selecting each channel's
   producer; named-channel requests keep the host-packed path;
@@ -42,7 +45,7 @@ import dataclasses
 import math
 import time
 from collections import OrderedDict
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -55,6 +58,8 @@ from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
 from repro.core.ingest import IngestPlan
 from repro.core.pixie import map_app
+from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan
+from repro.core.tiling import pow2_bucket, round_up
 
 
 class LRUCache:
@@ -77,12 +82,18 @@ class LRUCache:
         self.misses += 1
         return None
 
-    def put(self, key: Any, value: Any) -> None:
+    def put(self, key: Any, value: Any) -> List[Any]:
+        """Insert; returns the keys evicted to make room (callers that
+        cache executables log them so eviction churn names the exact
+        plan involved)."""
         self._d[key] = value
         self._d.move_to_end(key)
+        evicted = []
         while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
+            k, _ = self._d.popitem(last=False)
+            evicted.append(k)
             self.evictions += 1
+        return evicted
 
     def __len__(self) -> int:
         return len(self._d)
@@ -111,6 +122,7 @@ class FleetRequest:
 @dataclasses.dataclass
 class FleetStats:
     backend: str = "xla"         # execution backend of every dispatch
+    devices: int = 1             # app-axis mesh width of every dispatch
     submitted: int = 0
     executed: int = 0
     dispatches: int = 0          # batched overlay launches
@@ -118,11 +130,20 @@ class FleetStats:
     padded_app_slots: int = 0    # wasted N-axis slots from tile rounding
     map_calls: int = 0           # place/route runs (config-cache misses)
     config_cache_hits: int = 0
-    overlay_builds: int = 0      # batched executables built (per GridSpec)
+    overlay_builds: int = 0      # batched executables built (per OverlayPlan)
     overlay_cache_hits: int = 0
     stack_bank_hits: int = 0     # stacked settings banks reused across flushes
+    # Full plan-key stamp of every dispatch: "<plan.key()>|<padded tile>"
+    # -> dispatch count.  Bench JSON and assertion/eviction messages name
+    # the exact executable involved, not just the backend.
+    dispatch_plans: Dict[str, int] = dataclasses.field(default_factory=dict)
+    evicted_plans: List[str] = dataclasses.field(default_factory=list)
 
-    def as_dict(self) -> Dict[str, int]:
+    def stamp_dispatch(self, plan: OverlayPlan, tile: str) -> None:
+        key = f"{plan.key()}|{tile}"
+        self.dispatch_plans[key] = self.dispatch_plans.get(key, 0) + 1
+
+    def as_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
 
 
@@ -135,17 +156,6 @@ class _Prepared:
     kind: str                    # "image" (fused ingest) | "channels"
     payload: Any                 # np [H, W] raw frame | jnp [C, batch]
     hw: Optional[Tuple[int, int]]
-
-
-def _round_up(n: int, tile: int) -> int:
-    return ((n + tile - 1) // tile) * tile
-
-
-def _pow2_bucket(n: int, floor: int) -> int:
-    b = max(floor, 1)
-    while b < n:
-        b *= 2
-    return b
 
 
 class PixieFleet:
@@ -168,25 +178,36 @@ class PixieFleet:
         max_configs: int = 256,
         max_retained_results: int = 1024,
         backend: str = "xla",
+        devices: Optional[int] = None,
     ):
         self.default_grid = default_grid or gridlib.sobel_grid()
         # Execution backend for every dispatch: "xla" (the hand-lowered
         # jnp interpreter, the bitwise oracle) or "pallas" (the batched
         # VCGRA megakernels, interpreted off-TPU / compiled on TPU).
         self.backend = interpreter.check_backend(backend)
+        # App-axis mesh width: devices=k shards the N axis of every
+        # batched dispatch over the first k local devices (bitwise-equal
+        # to single-device; falls back to it when the host has fewer
+        # devices -- see core/plan.py).
+        self.devices = 1 if devices is None else int(devices)
+        if self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
         self.batch_tile = int(batch_tile)
+        # App-axis tiles must also divide evenly across the mesh so the
+        # plan executable never has to re-pad internally (padded_app_slots
+        # then accounts for ALL padding).
+        self._app_tile = math.lcm(self.batch_tile, self.devices)
         self.min_pixel_batch = int(min_pixel_batch)
         # Fused frame canvases bucket H and W separately; the floor keeps
         # the same ~min_pixel_batch pixels per tile as the unfused path.
         self.min_image_side = max(1, int(math.isqrt(self.min_pixel_batch)))
-        # Keyed by (GridSpec, "packed", backend) or
-        # (GridSpec, "fused", radius, backend).
+        # Keyed by OverlayPlan (the one cache key of the plan pipeline).
         self._overlays = LRUCache(max_overlays)
         self._configs = LRUCache(max_configs)
         # Stacked settings banks: a repeat flush of the same tenant set
         # skips re-stacking N configs (keyed by their cache identities).
         self._banks = LRUCache(4 * max_overlays)
-        self.stats = FleetStats(backend=backend)
+        self.stats = FleetStats(backend=self.backend, devices=self.devices)
         self._pending: List[Tuple[int, Tuple]] = []
         # Bounded: unredeemed tickets are evicted oldest-first so a service
         # that only consumes flush()'s return value cannot leak memory.
@@ -227,36 +248,42 @@ class PixieFleet:
         self._configs.put(key, cfg)
         return cfg
 
-    def overlay_for(self, grid: GridSpec) -> Callable:
-        """The jitted batched overlay executor for ``grid`` -- built once
-        per (grid structure, backend), shared by every tile shape via
-        XLA's own shape-keyed jit cache."""
-        key = (grid, "packed", self.backend)
-        fn = self._overlays.get(key)
+    def plan_for_dispatch(self, grid: GridSpec, *, fused: bool,
+                          radius: Optional[int] = None) -> OverlayPlan:
+        """The :class:`OverlayPlan` of one dispatch on this fleet: the
+        fleet contributes its backend and device axes, the request group
+        contributes grid/fusion/radius."""
+        return OverlayPlan(
+            grid=grid, batched=True, fused=fused, radius=radius,
+            backend=self.backend, devices=self.devices,
+        )
+
+    def overlay_executable(self, plan: OverlayPlan) -> OverlayExecutable:
+        """The compiled executable for ``plan``, through the fleet's LRU:
+        built once per distinct plan (THE cache key -- backend, fusion,
+        radius, devices and grid all live in it), shared by every padded
+        tile shape via XLA's own shape-keyed jit cache."""
+        fn = self._overlays.get(plan)
         if fn is not None:
             self.stats.overlay_cache_hits += 1
             return fn
-        fn = interpreter.make_batched_overlay_fn(grid, backend=self.backend)
+        fn = compile_plan(plan)
         self.stats.overlay_builds += 1
-        self._overlays.put(key, fn)
+        for evicted in self._overlays.put(plan, fn):
+            self.stats.evicted_plans.append(evicted.key())
         return fn
 
-    def fused_overlay_for(self, grid: GridSpec, radius: int) -> Callable:
-        """The jitted batched *fused-ingest* executor for ``grid``: raw
-        frames in, line buffers formed inside the dispatch.  Built once per
-        (grid, stencil radius, backend); ingest plans are runtime settings,
-        so every app shares it."""
-        key = (grid, "fused", radius, self.backend)
-        fn = self._overlays.get(key)
-        if fn is not None:
-            self.stats.overlay_cache_hits += 1
-            return fn
-        fn = interpreter.make_batched_fused_overlay_fn(
-            grid, radius, backend=self.backend
+    def overlay_for(self, grid: GridSpec) -> OverlayExecutable:
+        """The batched (pre-packed channels) executable for ``grid``."""
+        return self.overlay_executable(self.plan_for_dispatch(grid, fused=False))
+
+    def fused_overlay_for(self, grid: GridSpec, radius: int) -> OverlayExecutable:
+        """The batched *fused-ingest* executable for ``grid``: raw frames
+        in, line buffers formed inside the dispatch.  Ingest plans are
+        runtime settings, so every app shares it."""
+        return self.overlay_executable(
+            self.plan_for_dispatch(grid, fused=True, radius=radius)
         )
-        self.stats.overlay_builds += 1
-        self._overlays.put(key, fn)
-        return fn
 
     def overlay_executable_count(self, grid: Optional[GridSpec] = None) -> int:
         """Number of XLA executables compiled for a grid's batched overlays
@@ -267,9 +294,8 @@ class PixieFleet:
         counter."""
         grid = grid or self.default_grid
         counts = []
-        for key, fn in self._overlays._d.items():
-            key_grid = key[0] if isinstance(key, tuple) else key
-            if key_grid == grid:
+        for plan, fn in self._overlays._d.items():
+            if plan.grid == grid:
                 sizer = getattr(fn, "_cache_size", None)
                 counts.append(int(sizer()) if callable(sizer) else -1)
         if not counts:
@@ -390,9 +416,9 @@ class PixieFleet:
         t0 = time.perf_counter()
         fn = self.fused_overlay_for(grid, radius)
         n = len(items)
-        n_tile = _round_up(n, self.batch_tile)
-        Hb = _pow2_bucket(max(p.hw[0] for _, p in items), self.min_image_side)
-        Wb = _pow2_bucket(max(p.hw[1] for _, p in items), self.min_image_side)
+        n_tile = round_up(n, self._app_tile)
+        Hb = pow2_bucket(max(p.hw[0] for _, p in items), self.min_image_side)
+        Wb = pow2_bucket(max(p.hw[1] for _, p in items), self.min_image_side)
         canvas = np.zeros((n_tile, Hb, Wb), dtype=grid.dtype)
         for i, (_, p) in enumerate(items):
             H, W = p.hw
@@ -410,6 +436,7 @@ class PixieFleet:
         ys = fn(stacked, ingests, jnp.asarray(canvas))
         self.stats.dispatches += 1
         self.stats.fused_dispatches += 1
+        self.stats.stamp_dispatch(fn.plan, f"n{n_tile}x{Hb}x{Wb}")
         self.stats.executed += n
         for i, (ticket, p) in enumerate(items):
             H, W = p.hw
@@ -426,9 +453,9 @@ class PixieFleet:
         t0 = time.perf_counter()
         fn = self.overlay_for(grid)
         n = len(items)
-        n_tile = _round_up(n, self.batch_tile)
-        batch = _pow2_bucket(max(p.payload.shape[-1] for _, p in items),
-                             self.min_pixel_batch)
+        n_tile = round_up(n, self._app_tile)
+        batch = pow2_bucket(max(p.payload.shape[-1] for _, p in items),
+                            self.min_pixel_batch)
         configs = [p.cfg for _, p in items]
         xs = interpreter.pad_batches([p.payload for _, p in items], batch)
         # Tile padding on the app axis: replay config[0] on zero pixels.
@@ -442,6 +469,7 @@ class PixieFleet:
         t0 = time.perf_counter()
         ys = fn(stacked, xstack)
         self.stats.dispatches += 1
+        self.stats.stamp_dispatch(fn.plan, f"n{n_tile}xb{batch}")
         self.stats.executed += n
         for i, (ticket, p) in enumerate(items):
             y = np.asarray(ys[i, :, : p.payload.shape[-1]])

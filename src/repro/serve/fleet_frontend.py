@@ -57,6 +57,7 @@ class FleetFrontend:
         registry: Optional[Dict[str, object]] = None,
         max_done: int = 1024,
         backend: Optional[str] = None,
+        devices: Optional[int] = None,
     ):
         if backend is not None:
             check_backend(backend)
@@ -65,7 +66,13 @@ class FleetFrontend:
                     f"backend={backend!r} conflicts with the provided fleet's "
                     f"backend {fleet.backend!r}; configure the PixieFleet instead"
                 )
-        self.fleet = fleet or PixieFleet(backend=backend or "xla")
+        if devices is not None and fleet is not None and fleet.devices != devices:
+            raise ValueError(
+                f"devices={devices!r} conflicts with the provided fleet's "
+                f"devices {fleet.devices!r}; configure the PixieFleet instead"
+            )
+        self.fleet = fleet or PixieFleet(backend=backend or "xla",
+                                         devices=devices)
         # Name -> DFG factory; defaults to the paper's application library.
         self.registry = dict(registry) if registry is not None else dict(app_lib.ALL_APPS)
         self._arrivals: Dict[int, Tuple[str, float]] = {}
@@ -134,6 +141,11 @@ class FleetFrontend:
     def backend(self) -> str:
         """Execution backend of the underlying fleet ("xla" or "pallas")."""
         return self.fleet.backend
+
+    @property
+    def devices(self) -> int:
+        """App-axis mesh width of the underlying fleet's dispatch plans."""
+        return self.fleet.devices
 
     @property
     def stats(self):
