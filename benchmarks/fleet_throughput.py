@@ -4,24 +4,30 @@ with and without fused device-side ingest.
 The overlay's compile-once economics (paper Sec. V-E) amortize the FPGA
 compile across applications *in time* (sequential reconfiguration); the
 fleet runtime amortizes it *in space*: N different applications stacked
-into one vmapped dispatch of the same executable.  PR 1 measured that the
-dispatch itself got ~2.6x faster while end-to-end serving was capped at
-~1.7x by per-request input packing (~20 host-issued device ops per frame);
-this benchmark additionally measures the fused-ingest path (line-buffer
-formation *inside* the dispatch, `make_batched_fused_overlay_fn`) that
-closes that gap:
+into one vmapped dispatch of the same executable.  Every measured path is
+one cell of the `OverlayPlan` axis product, compiled by the single
+entrypoint `repro.core.plan.compile_plan` (PR 1 measured that the batched
+dispatch got ~2.6x faster while end-to-end serving was capped at ~1.7x by
+per-request input packing -- ~20 host-issued device ops per frame; the
+fused plans below are what closed that gap):
 
   sequential     one conventional `Pixie`, N per-app dispatches of the
                  compiled overlay (settings swap between calls)
-  batched        one `make_batched_overlay_fn` dispatch over the N stacked
-                 configs (pre-packed inputs)
+  batched        ONE dispatch of the batched (pre-packed channels)
+                 `OverlayPlan` over the N stacked configs
   unfused e2e    per-request `stencil_inputs` + `pack_inputs` + dispatch
                  (the PR 1 serving path, kept as the oracle)
-  fused e2e      `PixieFleet.run_many` on raw frames: pack + dispatch +
-                 unpack as ONE executable per grid
-  pallas e2e     the same fused fleet path on `backend="pallas"`: the
+  fused e2e      `PixieFleet.run_many` on raw frames -- a fused batched
+                 `OverlayPlan`: pack + dispatch + unpack as ONE
+                 executable per grid
+  pallas e2e     the same fused fleet plan on `backend="pallas"`: the
                  batched fused-ingest megakernel (interpret mode off-TPU),
                  measured so the BENCH trajectory covers both backends
+
+`--frames` additionally sweeps frame sizes (default 32^2/128^2/256^2) and
+records, per size, the row-tiled vs untiled fused plans (`tile_rows`) and
+the sync vs async double-buffered ingest pipelines (`ingest`) -- the two
+PR 5 plan axes -- into a `frames` block of the BENCH JSON.
 
 Identical inputs, bitwise-identical outputs (asserted), compile-once
 invariants asserted via the fleet's cache counters.  Emits a machine-
@@ -29,9 +35,10 @@ readable ``BENCH {json}`` line (incl. the pack fraction of both e2e
 paths) plus a JSON artifact for CI trend tracking (``--out``).
 
 Usage:
-  python benchmarks/fleet_throughput.py            # full run
-  python benchmarks/fleet_throughput.py --smoke    # CI-sized (<30 s)
-  python benchmarks/fleet_throughput.py --check    # exit 1 if < 2x
+  python benchmarks/fleet_throughput.py                 # full run
+  python benchmarks/fleet_throughput.py --smoke         # CI-sized (<30 s)
+  python benchmarks/fleet_throughput.py --frames        # + size sweep
+  python benchmarks/fleet_throughput.py --check         # exit 1 on floors
 """
 
 from __future__ import annotations
@@ -49,6 +56,7 @@ from repro.core import Pixie, sobel_grid
 from repro.core import applications as apps
 from repro.core.bitstream import VCGRAConfig
 from repro.core.interpreter import pack_inputs, pad_channels
+from repro.core.tiling import TILE_AUTO, resolve_tile_rows
 from repro.kernels.vcgra import default_interpret
 from repro.runtime.fleet import FleetRequest, PixieFleet
 
@@ -237,6 +245,94 @@ def run(n_apps: int, image_hw: int, reps: int) -> dict:
     }
 
 
+def run_frames(n_apps: int, sizes, reps: int) -> dict:
+    """The PR 5 plan-axes sweep: per frame size, fused e2e throughput of
+
+      sync_untiled    tile_rows=None, ingest="sync"  (the PR 4 baseline)
+      sync_tiled      tile_rows=side//4 (a real multi-tile split at every
+                      size, unlike TILE_AUTO which stays untiled at smoke
+                      sizes), ingest="sync"
+      async_tiled     same tiling + the double-buffered ingest pipeline
+                      (pooled donated canvases, lazy outputs)
+
+    All three are bitwise-asserted against each other before timing.
+    Timed rounds call ``jax.block_until_ready`` on the outputs, so the
+    async path's laziness is charged honestly -- its win must come from
+    real pack/execute overlap, not deferred work escaping the clock.
+    """
+    rng = np.random.default_rng(1)
+    grid = sobel_grid()
+    names = [FLEET_APPS[i % len(FLEET_APPS)] for i in range(n_apps)]
+    frames = {}
+    for side in sizes:
+        img = rng.integers(0, 256, (side, side)).astype(np.int32)
+        requests = [FleetRequest(app=n, image=img) for n in names]
+        tile = max(8, side // 4)
+        variants = {
+            "sync_untiled": dict(ingest="sync", tile_rows=None),
+            "sync_tiled": dict(ingest="sync", tile_rows=tile),
+            "async_tiled": dict(ingest="async", tile_rows=tile),
+        }
+        # Larger frames amortize per-round overhead: fewer reps suffice
+        # (but keep enough for the best-of estimator to settle).
+        reps_side = max(8, reps // max(1, side // 32))
+        entry = {
+            "n_apps": n_apps,
+            "tile_rows": tile,
+            "auto_tile_rows": resolve_tile_rows(TILE_AUTO, side, side, 1, grid),
+            "reps": reps_side,
+        }
+        # Warm every variant (compile + bitwise-assert), then time them
+        # INTERLEAVED round-robin with a best-of estimator: scheduler load
+        # on shared CI hosts drifts over seconds, so timing the variants
+        # one after another would hand whichever ran during a quiet spell
+        # a spurious win -- interleaving exposes all three to the same
+        # noise and the min filters it.
+        fleets, e2es, best = {}, {}, {}
+        ref = None
+        for key, axes in variants.items():
+            fleet = PixieFleet(default_grid=grid, batch_tile=n_apps, **axes)
+
+            def e2e(fleet=fleet):
+                return jax.block_until_ready(fleet.run_many(requests))
+
+            outs = e2e()   # warm + compile
+            if ref is None:
+                ref = [np.asarray(o) for o in outs]
+            else:
+                for a, b in zip(ref, outs):
+                    np.testing.assert_array_equal(a, np.asarray(b))
+            e2e()          # second warm round settles the canvas pool
+            fleets[key], e2es[key], best[key] = fleet, e2e, float("inf")
+        for _ in range(reps_side):
+            for key, e2e in e2es.items():
+                t0 = time.perf_counter()
+                e2e()
+                best[key] = min(best[key], time.perf_counter() - t0)
+        for key, axes in variants.items():
+            fleet, t = fleets[key], best[key]
+            entry[key] = {
+                "e2e_s_per_round": t,
+                "e2e_apps_per_s": n_apps / t,
+                "e2e_mpixels_per_s": n_apps * side * side / t / 1e6,
+            }
+            # compile-once must hold per variant (one fused plan each)
+            assert fleet.stats.overlay_builds == 1, fleet.stats.as_dict()
+            if axes["ingest"] == "async":
+                entry[key]["ingest_overlap_s"] = fleet.stats.ingest_overlap_s
+                entry[key]["canvas_pool_hits"] = fleet.stats.canvas_pool_hits
+        entry["tiled_vs_untiled"] = (
+            entry["sync_tiled"]["e2e_apps_per_s"]
+            / entry["sync_untiled"]["e2e_apps_per_s"]
+        )
+        entry["async_vs_sync"] = (
+            entry["async_tiled"]["e2e_apps_per_s"]
+            / entry["sync_tiled"]["e2e_apps_per_s"]
+        )
+        frames[str(side)] = entry
+    return frames
+
+
 def main(argv=None) -> dict:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true", help="CI-sized quick run")
@@ -244,9 +340,15 @@ def main(argv=None) -> dict:
     p.add_argument("--image", type=int, default=None, help="square image side")
     p.add_argument("--reps", type=int, default=None)
     p.add_argument("--out", type=str, default=None, help="write BENCH JSON here")
+    p.add_argument("--frames", type=int, nargs="*", default=None,
+                   help="sweep these square frame sides (bare flag: 32 128 "
+                        "256) recording tiled-vs-untiled and sync-vs-async "
+                        "fused e2e per size")
     p.add_argument("--check", action="store_true",
-                   help="exit nonzero unless batched >= 2x sequential AND "
-                        "fused e2e >= 2x unfused e2e")
+                   help="exit nonzero unless batched >= 2x sequential, fused "
+                        "e2e >= 2x unfused e2e, pallas >= floor -- and, with "
+                        "--frames, tiled >= 0.8x untiled at 32^2 and async "
+                        ">= sync at 256^2")
     a = p.parse_args(argv)
 
     # Many small frames is the fleet's target regime (per-dispatch overhead
@@ -257,6 +359,8 @@ def main(argv=None) -> dict:
     reps = a.reps or (5 if a.smoke else 30)
 
     result = run(n_apps, image, reps)
+    if a.frames is not None:
+        result["frames"] = run_frames(n_apps, a.frames or [32, 128, 256], reps)
     print(f"fleet throughput: {n_apps} apps on {result['grid']}, "
           f"{image}x{image} px, {reps} reps")
     print(f"  sequential   {result['sequential_apps_per_s']:10.1f} apps/s   "
@@ -277,6 +381,14 @@ def main(argv=None) -> dict:
     print(f"  plan cache   hit rate {result['plan_cache']['hit_rate']:.2f} "
           f"over {len(result['plan_cache']['plans'])} plans, "
           f"{result['device_count']} device(s)")
+    for side, e in result.get("frames", {}).items():
+        print(f"  {side:>4}^2 px    "
+              f"untiled {e['sync_untiled']['e2e_apps_per_s']:8.1f}  "
+              f"tiled(r{e['tile_rows']}) {e['sync_tiled']['e2e_apps_per_s']:8.1f}  "
+              f"async {e['async_tiled']['e2e_apps_per_s']:8.1f} apps/s  "
+              f"(x{e['tiled_vs_untiled']:.2f} tiled, "
+              f"x{e['async_vs_sync']:.2f} async, "
+              f"auto tile {e['auto_tile_rows']})")
 
     print("BENCH " + json.dumps(result))
     if a.out:
@@ -296,6 +408,28 @@ def main(argv=None) -> dict:
                 f"pallas fused e2e x{result['pallas_vs_xla_fused_e2e']:.3f} "
                 f"of xla < floor x{PALLAS_FLOOR_VS_XLA}"
             )
+        frames = result.get("frames", {})
+        if "32" in frames and frames["32"]["tiled_vs_untiled"] < 0.8:
+            # Tiling buys nothing at smoke sizes (the auto heuristic stays
+            # untiled there); the floor only guards against the tiled
+            # executors regressing catastrophically.
+            fails.append(
+                f"tiled fused e2e x{frames['32']['tiled_vs_untiled']:.2f} "
+                f"of untiled at 32^2 < floor x0.8"
+            )
+        if "256" in frames:
+            if frames["256"]["async_vs_sync"] < 1.0:
+                fails.append(
+                    f"async fused e2e x{frames['256']['async_vs_sync']:.2f} "
+                    f"of sync at 256^2 < floor x1.0"
+                )
+            beats = (frames["256"]["async_tiled"]["e2e_apps_per_s"]
+                     / frames["256"]["sync_untiled"]["e2e_apps_per_s"])
+            if beats < 1.0:
+                fails.append(
+                    f"async+tiled fused e2e x{beats:.2f} of the sync "
+                    f"untiled path at 256^2 < floor x1.0"
+                )
         if fails:
             raise SystemExit("FAIL: " + "; ".join(fails))
     return result

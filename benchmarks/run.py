@@ -106,7 +106,9 @@ def main(argv=None) -> None:
     try:
         fleet_args = ["--smoke"]
         if args.check:
-            fleet_args += ["--check", "--out", BENCH_FLEET_JSON]
+            # Mirror CI's smoke-bench job: the --frames sweep adds the
+            # per-size tiled/async numbers (and their floors) to the JSON.
+            fleet_args += ["--check", "--frames", "--out", BENCH_FLEET_JSON]
         r = fleet_throughput.main(fleet_args)
         csv_rows.append((
             "fleet/batched_vs_sequential",

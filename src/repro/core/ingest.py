@@ -29,6 +29,25 @@ import jax.numpy as jnp
 import numpy as np
 
 
+#: Ingest pipelining modes an :class:`repro.core.plan.OverlayPlan` (and the
+#: fleet scheduler) may name.  "sync" packs, dispatches and materializes in
+#: strict order; "async" double-buffers: frames are embedded into a reused
+#: canvas pool, shipped with ``jax.device_put`` into a donated operand, and
+#: outputs are unpacked lazily so packing of flush k+1 overlaps the device
+#: execution of flush k.  Both modes are bitwise-identical.
+INGEST_MODES = ("sync", "async")
+
+
+def check_ingest(mode: str) -> str:
+    """Validate (and return) an ingest mode; shared by every layer that
+    takes the ingest axis (plan, fleet, front-end)."""
+    if mode not in INGEST_MODES:
+        raise ValueError(
+            f"unknown ingest mode {mode!r}; expected one of {INGEST_MODES}"
+        )
+    return mode
+
+
 def tap_offsets(radius: int) -> Tuple[Tuple[int, int], ...]:
     """Canonical tap-bank layout for a stencil radius: all (dj, di) offsets
     in row-major order.  Every plan built for the same radius indexes the

@@ -22,8 +22,10 @@ both of which the parameterized path (``specialize.py``) folds away.
 from __future__ import annotations
 
 import warnings
+from functools import partial
 from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import ops as pe_ops
@@ -34,7 +36,13 @@ from repro.core.ingest import IngestPlan, tap_offsets
 # Padding/bucketing primitives live in core/tiling.py (one source of truth
 # shared with the plan compiler and the fleet scheduler); re-exported here
 # because this module is their historical home.
-from repro.core.tiling import pad_batches, pad_channels  # noqa: F401
+from repro.core.tiling import (  # noqa: F401
+    halo_row_slabs,
+    num_row_tiles,
+    pad_batches,
+    pad_channels,
+    resolve_tile_rows,
+)
 
 ConfigArrays = Tuple[Tuple[jnp.ndarray, ...], Tuple[jnp.ndarray, ...], jnp.ndarray]
 IngestArrays = Tuple[jnp.ndarray, jnp.ndarray]  # (tap_sel, const_vals)
@@ -222,6 +230,29 @@ def form_tap_bank(images: jnp.ndarray, radius: int, dtype) -> jnp.ndarray:
     return jnp.stack(rows, axis=1)
 
 
+def form_tap_bank_slab(slabs: jnp.ndarray, radius: int, dtype) -> jnp.ndarray:
+    """Line-buffer formation for one row tile: a row-haloed slab -> bank.
+
+    ``slabs``: [N, tile_rows + 2*radius, W] where the first and last
+    ``radius`` rows are the halo (real neighbour rows mid-frame, zeros at
+    the frame border -- the caller slices them from the zero-row-padded
+    frame).  Returns [N, T+1, tile_rows*W]: rows are only *column*-padded
+    here because the row halo already travels with the slab; every bank row
+    is bitwise the ``form_tap_bank`` row restricted to the tile's pixels.
+    """
+    s = jnp.asarray(slabs, dtype)
+    n, S, W = s.shape
+    r = radius
+    tr = S - 2 * r
+    padded = jnp.pad(s, ((0, 0), (0, 0), (r, r)))
+    rows = [
+        padded[:, r + dj : r + dj + tr, r + di : r + di + W].reshape(n, tr * W)
+        for dj, di in tap_offsets(radius)
+    ]
+    rows.append(jnp.zeros((n, tr * W), dtype))
+    return jnp.stack(rows, axis=1)
+
+
 def apply_ingest(bank: jnp.ndarray, ingest: IngestArrays) -> jnp.ndarray:
     """Produce the memory-VC channels of ONE app from its tap bank.
 
@@ -277,15 +308,67 @@ def batched_fused_overlay_step(
     muxes in :func:`batched_overlay_step`: one plain gather over a
     [N*(T+1), pixels] bank, never a batched-indices gather.
     """
-    tap_sel, const_vals = ingests
     bank = form_tap_bank(images, radius, grid.dtype)
+    return batched_overlay_step(grid, configs, select_channels_batched(bank, ingests))
+
+
+def select_channels_batched(bank: jnp.ndarray, ingests: IngestArrays) -> jnp.ndarray:
+    """Produce every app's memory-VC channels from a batched tap bank
+    [N, T+1, pixels] -- the flat-bank offset gather shared by the untiled
+    and row-tiled fused executors."""
+    tap_sel, const_vals = ingests
     n, t1, pixels = bank.shape
     flat = bank.reshape(n * t1, pixels)
     offs = (jnp.arange(n, dtype=tap_sel.dtype) * t1)[:, None]
     gathered = jnp.take(flat, (tap_sel + offs).reshape(-1), axis=0)
     gathered = gathered.reshape(n, -1, pixels)
-    xs = jnp.where((tap_sel == t1 - 1)[..., None], const_vals[..., None], gathered)
-    return batched_overlay_step(grid, configs, xs)
+    return jnp.where((tap_sel == t1 - 1)[..., None], const_vals[..., None], gathered)
+
+
+def tiled_batched_fused_overlay_step(
+    grid: GridSpec, radius: int, tile_rows, configs: ConfigArrays,
+    ingests: IngestArrays, images: jnp.ndarray,
+) -> jnp.ndarray:
+    """Row-tiled twin of :func:`batched_fused_overlay_step`: bitwise-equal
+    outputs with the tap bank formed per ``[tile_rows + 2*radius, W]``
+    slab -- the XLA *oracle* for the tiled Pallas megakernel.  Note that
+    only the Pallas grid actually bounds residency (one slab in VMEM at a
+    time); this twin trades peak memory for fusion (all slabs, the full
+    bank and T-replicated settings live at once -- slightly *more* than
+    untiled), which is the right trade for the oracle/CPU role it plays.
+
+    ``tile_rows``: rows per tile, ``tiling.TILE_AUTO`` (VMEM budget
+    heuristic) or an int; resolved against the static frame shape at trace
+    time, so compile-once per (grid, radius, N, H, W) still holds.  The
+    frame's row axis is zero-padded up to ``T * tile_rows`` -- the padding
+    is read only as bottom halo (exactly ``form_tap_bank``'s zero border)
+    and the padded output rows are sliced back off, so any ``tile_rows``,
+    including ones that do not divide H, is exact.
+
+    Lowering note: the T row tiles ride the *app* axis (every operand
+    replicated/tiled to N*T leading rows) rather than a Python loop over
+    tiles -- one pipeline pass over all slabs keeps XLA:CPU's fusion
+    intact, where a per-tile loop fragments the program into T small op
+    islands (~25% slower at smoke sizes).  The per-(app, tile) grid loop
+    lives in the Pallas megakernel, where it is the whole point (VMEM
+    residency); here the tile axis is just more embarrassing parallelism.
+    """
+    imgs = jnp.asarray(images, grid.dtype)
+    n, H, W = imgs.shape
+    r = radius
+    tr = resolve_tile_rows(tile_rows, H, W, r, grid)
+    if tr >= H:
+        return batched_fused_overlay_step(grid, radius, configs, ingests, imgs)
+    T = num_row_tiles(H, tr)
+    slabs = halo_row_slabs(imgs, tr, r).reshape(n * T, tr + 2 * r, W)
+    bank = form_tap_bank_slab(slabs, radius, grid.dtype)   # [N*T, taps+1, tr*W]
+    rep = partial(jnp.repeat, repeats=T, axis=0)
+    xs = select_channels_batched(bank, jax.tree_util.tree_map(rep, ingests))
+    ys = batched_overlay_step(grid, jax.tree_util.tree_map(rep, configs), xs)
+    # [N*T, K, tr*W] -> per-app tile concat along the pixel axis (row-major
+    # flattening makes each tile's pixels contiguous), minus the pad rows.
+    y = ys.reshape(n, T, -1, tr * W).swapaxes(1, 2).reshape(n, -1, T * tr * W)
+    return y[:, :, : H * W]
 
 
 def make_batched_fused_overlay_fn(grid: GridSpec, radius: int = 1,

@@ -39,19 +39,23 @@ deprecated shims delegating here.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import interpreter
 from repro.core.grid import GridSpec
+from repro.core.ingest import INGEST_MODES, check_ingest  # noqa: F401
+from repro.core.tiling import TILE_AUTO, check_tile_rows
 from repro.parallel.axes import app_mesh, shard_apps
 
 #: Execution backends a plan may name (re-exported from the interpreter,
 #: which owns the validation shared with the fleet and the front-end).
 BACKENDS = interpreter.BACKENDS
+
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,7 +72,19 @@ class OverlayPlan:
     * ``backend``  "xla" (the hand-lowered interpreter, the bitwise
       oracle) or "pallas" (the VCGRA megakernels);
     * ``devices``  how many local devices the app axis is sharded over
-      (1 = no mesh; >1 requires ``batched``).
+      (1 = no mesh; >1 requires ``batched``);
+    * ``tile_rows``  pixel-axis row tiling of the fused executors: None
+      (untiled -- the whole padded frame and tap bank are resident at
+      once), an int (rows per tile, each tile carrying a radius-wide row
+      halo) or ``tiling.TILE_AUTO`` (the VMEM budget heuristic picks at
+      trace time from the static frame shape).  Fused plans only --
+      the unfused path has no tap bank and already tiles its flat pixel
+      axis.  All values are bitwise-identical;
+    * ``ingest``   "sync" (pack, dispatch, materialize in order) or
+      "async" (the dispatch's frame/channel operand is *donated*, so the
+      fleet's double-buffered pipeline can ship pooled canvases with
+      ``jax.device_put`` and overlap packing flush k+1 with executing
+      flush k).  Bitwise-identical; only buffer lifetime differs.
 
     Two dispatches with equal plans share one compiled executable; any
     layer that caches executables keys on the plan itself.
@@ -80,9 +96,12 @@ class OverlayPlan:
     radius: Optional[int] = None     # tap-bank radius; fused plans only
     backend: str = "xla"
     devices: int = 1
+    tile_rows: Union[int, str, None] = None  # fused plans only
+    ingest: str = "sync"
 
     def __post_init__(self):
         interpreter.check_backend(self.backend)
+        check_ingest(self.ingest)
         if self.fused:
             # Canonical key: a fused plan always names its radius.
             object.__setattr__(
@@ -95,6 +114,16 @@ class OverlayPlan:
                 f"radius={self.radius} is meaningless for an unfused plan "
                 "(the tap bank only exists on the fused ingest path)"
             )
+        if self.tile_rows is not None:
+            if not self.fused:
+                raise ValueError(
+                    f"tile_rows={self.tile_rows!r} is meaningless for an "
+                    "unfused plan (pre-packed channels carry no row "
+                    "structure to halo-tile; the pixel axis is already "
+                    "block-tiled by the executors)"
+                )
+            # Canonical key: explicit tile heights are ints.
+            object.__setattr__(self, "tile_rows", check_tile_rows(self.tile_rows))
         if self.devices < 1:
             raise ValueError(f"devices must be >= 1, got {self.devices}")
         if self.devices > 1 and not self.batched:
@@ -105,14 +134,21 @@ class OverlayPlan:
 
     def key(self) -> str:
         """Compact human-readable identity, used by stats stamping and
-        bench JSON (``FleetStats.dispatch_plans``)."""
-        return "|".join([
+        bench JSON (``FleetStats.dispatch_plans``).  The tile/ingest
+        segments appear only off their defaults so PR 4-era keys are
+        stable."""
+        parts = [
             self.grid.name,
             "batched" if self.batched else "single",
             f"fused:r{self.radius}" if self.fused else "channels",
             self.backend,
             f"dev{self.devices}",
-        ])
+        ]
+        if self.tile_rows is not None:
+            parts.append(f"tile:{self.tile_rows}")
+        if self.ingest != "sync":
+            parts.append(self.ingest)
+        return "|".join(parts)
 
 
 class OverlayExecutable:
@@ -180,6 +216,19 @@ def _xla_single(plan: OverlayPlan) -> Callable:
 
 @register_executor("xla", batched=False, fused=True)
 def _xla_single_fused(plan: OverlayPlan) -> Callable:
+    if plan.tile_rows is not None:
+        # Single-app tiled execution rides the batched tiled twin with N=1
+        # (mirrors the pallas single-app adapters in kernels/vcgra/ops.py).
+        batched = partial(
+            interpreter.tiled_batched_fused_overlay_step,
+            plan.grid, plan.radius, plan.tile_rows,
+        )
+
+        def fn(config, ingest, image):
+            lift = partial(jax.tree_util.tree_map, lambda a: a[None])
+            return batched(lift(config), lift(ingest), image[None])[0]
+
+        return fn
     return partial(interpreter.fused_overlay_step, plan.grid, plan.radius)
 
 
@@ -190,6 +239,11 @@ def _xla_batched(plan: OverlayPlan) -> Callable:
 
 @register_executor("xla", batched=True, fused=True)
 def _xla_batched_fused(plan: OverlayPlan) -> Callable:
+    if plan.tile_rows is not None:
+        return partial(
+            interpreter.tiled_batched_fused_overlay_step,
+            plan.grid, plan.radius, plan.tile_rows,
+        )
     return partial(interpreter.batched_fused_overlay_step, plan.grid, plan.radius)
 
 
@@ -238,12 +292,43 @@ def compile_plan(plan: OverlayPlan) -> OverlayExecutable:
         raise ValueError(f"no executor registered for plan {plan.key()}")
     fn = builder(plan)
 
+    num_args = 3 if plan.fused else 2
     mesh = None
     if plan.devices > 1:
         mesh = app_mesh(plan.devices)
         if mesh is not None:
-            num_args = 3 if plan.fused else 2
             fn = _with_app_padding(
                 shard_apps(fn, mesh, num_args), plan.devices
             )
-    return OverlayExecutable(plan, jax.jit(fn), mesh=mesh)
+    # Async-ingest plans donate the trailing operand (the frames canvas /
+    # channel stack): the double-buffered pipeline ships a fresh
+    # device_put buffer per dispatch, so XLA may reuse its memory for the
+    # outputs instead of holding both live.  The settings/ingest banks are
+    # cross-flush caches and are never donated.  Accelerators only: on
+    # XLA:CPU donation buys nothing (host memory is not the scarce
+    # resource) and measurably slows the fused executable (~4% at 256^2
+    # -- input aliasing constrains its buffer assignment), so the CPU
+    # async path keeps the donation-free executable.
+    donate = ()
+    if plan.ingest == "async" and jax.default_backend() != "cpu":
+        donate = (num_args - 1,)
+        _install_donation_warning_filter()
+    return OverlayExecutable(plan, jax.jit(fn, donate_argnums=donate), mesh=mesh)
+
+
+_DONATION_FILTER_INSTALLED = False
+
+
+def _install_donation_warning_filter() -> None:
+    """Donation is a best-effort memory hint, not a contract: backends
+    that cannot alias the operand into an output warn on first lowering.
+    Filter just that message, once, and only when donation is actually in
+    play -- importing this module must not mute the diagnostic for
+    unrelated user code, and repeat compiles must not pile duplicate
+    entries onto the process-global filter list."""
+    global _DONATION_FILTER_INSTALLED
+    if not _DONATION_FILTER_INSTALLED:
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        _DONATION_FILTER_INSTALLED = True

@@ -12,9 +12,134 @@ already-valid config whose outputs are discarded.
 
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Sequence, Union
 
+import jax
 import jax.numpy as jnp
+
+#: Default on-chip working-set budget for the pixel-tiled fused executors
+#: (bytes).  Half of a TPU core's ~16 MiB VMEM is left for double-buffered
+#: HBM->VMEM pipelining and the settings banks; the resident slab working
+#: set (tap bank + memory-VC channels + widest PE level, all
+#: ``[_, tile_rows + 2*radius, W]``-shaped) must fit in the rest.
+DEFAULT_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+#: Sentinel ``OverlayPlan.tile_rows`` value: resolve the row-tile height
+#: from the VMEM budget heuristic at trace time (shapes are static under
+#: jit, so the pick is a trace-time constant and compile-once still holds
+#: per frame shape).
+TILE_AUTO = "auto"
+
+
+def check_tile_rows(tile_rows: Union[int, str, None]) -> Union[int, str, None]:
+    """Validate (and canonicalize) a ``tile_rows`` axis value -- ``None``
+    (untiled), :data:`TILE_AUTO`, or an int >= 1.  Shared by the plan and
+    the fleet so a misconfigured service fails at construction, not on
+    its first fused flush."""
+    if tile_rows is None or tile_rows == TILE_AUTO:
+        return tile_rows
+    try:
+        tr = int(tile_rows)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"tile_rows must be None, {TILE_AUTO!r} or an int >= 1, "
+            f"got {tile_rows!r}"
+        ) from None
+    if tr < 1:
+        raise ValueError(f"tile_rows must be >= 1 or {TILE_AUTO!r}, got {tr}")
+    return tr
+
+
+def slab_rows_per_budget(
+    W: int,
+    radius: int,
+    *,
+    num_inputs: int,
+    max_level_width: int,
+    itemsize: int,
+    budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> int:
+    """How many *output* rows of a fused row-tile fit the VMEM budget.
+
+    The fused megakernel's resident working set per kernel instance is
+    the tap bank (``(2r+1)^2 + 1`` producer rows), the memory-VC channel
+    matrix (``num_inputs`` rows) and the widest PE level
+    (``max_level_width`` rows), each ``tile_rows * W`` elements, plus the
+    ``(tile_rows + 2*radius) * W`` input slab itself.  Solving
+    ``bytes_per_output_row * tile_rows + halo_bytes <= budget`` for
+    ``tile_rows`` (the constant ``2*radius*W`` slab halo comes off the
+    budget up front, so the pick never exceeds it) gives the heuristic.
+    """
+    taps = (2 * radius + 1) ** 2 + 1
+    width = max(W, 1)
+    per_row = (taps + num_inputs + max_level_width + 1) * width * itemsize
+    budget = int(budget_bytes) - 2 * radius * width * itemsize
+    return max(1, budget // per_row)
+
+
+def resolve_tile_rows(
+    tile_rows: Union[int, str, None],
+    H: int,
+    W: int,
+    radius: int,
+    grid,
+    budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+) -> int:
+    """Resolve a plan's ``tile_rows`` axis against one frame shape.
+
+    ``None`` means untiled (one slab = the whole frame); :data:`TILE_AUTO`
+    asks the VMEM budget heuristic (:func:`slab_rows_per_budget`); an int
+    is taken verbatim.  The result is always clamped to ``[1, H]`` --
+    ``tile_rows >= H`` degenerates to the untiled single-slab layout, so
+    small frames pay no tiling machinery under the auto default.
+    """
+    if tile_rows is None:
+        return max(int(H), 1)
+    if tile_rows == TILE_AUTO:
+        picked = slab_rows_per_budget(
+            W, radius,
+            num_inputs=grid.num_inputs,
+            max_level_width=max(grid.pes_per_level),
+            itemsize=jnp.dtype(grid.dtype).itemsize,
+            budget_bytes=budget_bytes,
+        )
+        return max(1, min(picked, int(H)))
+    return max(1, min(int(tile_rows), int(H)))
+
+
+def num_row_tiles(H: int, tile_rows: int) -> int:
+    """Row-tile count for one frame: ``ceil(H / tile_rows)``."""
+    return -(-int(H) // int(tile_rows))
+
+
+def halo_row_slabs(images: jnp.ndarray, tile_rows: int, radius: int) -> jnp.ndarray:
+    """Overlapping row slabs for the tiled fused executors:
+    ``[N, H, W] -> [N, T, tile_rows + 2*radius, W]``.
+
+    The ONE definition of the halo math, shared by the XLA tiled twin and
+    the Pallas megakernel so their slabs cannot drift apart (the bitwise
+    parity contract between the two backends rides on it).  Rows are
+    zero-padded by ``radius`` top and bottom plus the ragged-tile
+    remainder; each slab is a ``lax.dynamic_slice`` window whose first and
+    last ``radius`` rows are the halo -- real neighbour rows mid-frame,
+    zeros at the frame border, exactly ``form_tap_bank``'s border.  The
+    untiled case (T == 1) is the padded frame itself: no overlapping-slab
+    materialization on the small-frame path.
+    """
+    n, H, W = images.shape
+    r = int(radius)
+    tr = int(tile_rows)
+    T = num_row_tiles(H, tr)
+    padded = jnp.pad(images, ((0, 0), (r, T * tr - H + r), (0, 0)))
+    if T == 1:
+        return padded[:, None]
+    return jnp.stack(
+        [
+            jax.lax.dynamic_slice_in_dim(padded, t * tr, tr + 2 * r, axis=1)
+            for t in range(T)
+        ],
+        axis=1,
+    )
 
 
 def round_up(n: int, tile: int) -> int:

@@ -81,18 +81,21 @@ def pack_settings_batched(grid: GridSpec, stacked_configs):
     return ops_d, sel_d, jnp.asarray(out_sel, jnp.int32)
 
 
-def _batched_fused_pallas_fn(grid: GridSpec, radius: int = 1, interpret=None):
+def _batched_fused_pallas_fn(grid: GridSpec, radius: int = 1, interpret=None,
+                             tile_rows=None):
     """Unjitted batched fused-ingest *megakernel* executor (the plan
     builders return this so ``compile_plan`` applies the single outer
     jit; :func:`make_batched_fused_pallas_fn` is the jitted standalone).
 
-    Signature twin of the XLA batched fused-ingest plan executor
-    (``interpreter.batched_fused_overlay_step``):
+    Signature twin of the XLA batched fused-ingest plan executors
+    (``interpreter.batched_fused_overlay_step`` and its row-tiled twin):
     ``fn(stacked_configs, stacked_ingests, images) -> ys`` with
     ``images: [N, H, W] -> ys: [N, num_outputs, H*W]``.  Settings and
     ingest plans are runtime operands (scalar-prefetched to SMEM), so one
-    executable per (grid, radius, N, H, W) serves every application --
-    the same compile-once contract as the XLA path, bitwise-equal outputs.
+    executable per (grid, radius, tile_rows, N, H, W) serves every
+    application -- the same compile-once contract as the XLA path,
+    bitwise-equal outputs.  ``tile_rows`` (int / ``tiling.TILE_AUTO`` /
+    None) selects the pixel-axis row tiling of the kernel grid.
     """
 
     def fn(stacked_configs, stacked_ingests, images):
@@ -101,16 +104,16 @@ def _batched_fused_pallas_fn(grid: GridSpec, radius: int = 1, interpret=None):
         return vcgra_fused_batched(
             grid, radius, settings,
             (jnp.asarray(tap_sel, jnp.int32), const_vals),
-            images, interpret=interpret,
+            images, interpret=interpret, tile_rows=tile_rows,
         )
 
     return fn
 
 
 def make_batched_fused_pallas_fn(grid: GridSpec, radius: int = 1,
-                                 interpret=None):
+                                 interpret=None, tile_rows=None):
     """Jit-once standalone form of :func:`_batched_fused_pallas_fn`."""
-    return jax.jit(_batched_fused_pallas_fn(grid, radius, interpret))
+    return jax.jit(_batched_fused_pallas_fn(grid, radius, interpret, tile_rows))
 
 
 def _batched_pallas_fn(grid: GridSpec, block_n: int = LANE, interpret=None):
@@ -146,7 +149,8 @@ def make_batched_pallas_fn(grid: GridSpec, block_n: int = LANE, interpret=None):
 
 @register_executor("pallas", batched=True, fused=True)
 def _plan_batched_fused(plan: OverlayPlan):
-    return _batched_fused_pallas_fn(plan.grid, plan.radius)
+    return _batched_fused_pallas_fn(plan.grid, plan.radius,
+                                    tile_rows=plan.tile_rows)
 
 
 @register_executor("pallas", batched=True, fused=False)
@@ -174,7 +178,8 @@ def _plan_single(plan: OverlayPlan):
 
 @register_executor("pallas", batched=False, fused=True)
 def _plan_single_fused(plan: OverlayPlan):
-    batched = _batched_fused_pallas_fn(plan.grid, plan.radius)
+    batched = _batched_fused_pallas_fn(plan.grid, plan.radius,
+                                       tile_rows=plan.tile_rows)
 
     def fn(config, ingest, image):
         return batched(_lift_app_axis(config), _lift_app_axis(ingest),

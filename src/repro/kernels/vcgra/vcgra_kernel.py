@@ -27,6 +27,7 @@ unrolled inside the kernel: VMEM working set is
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -40,6 +41,12 @@ from repro.core.grid import GridSpec
 from repro.core.ingest import tap_offsets
 from repro.core.ops import Op
 from repro.core.specialize import _live_slots
+from repro.core.tiling import (
+    TILE_AUTO,
+    halo_row_slabs,
+    num_row_tiles,
+    resolve_tile_rows,
+)
 
 LANE = 128
 
@@ -260,30 +267,35 @@ def vcgra_batched(
 
 def _fused_batched_body(
     grid: GridSpec, radius: int,
-    tap_sel_ref, op_ref, sel_ref, outsel_ref, const_ref, img_ref, o_ref,
+    tap_sel_ref, op_ref, sel_ref, outsel_ref, const_ref, slab_ref, o_ref,
 ):
-    """Fused-ingest megakernel body: raw frame -> outputs, per app.
+    """Fused-ingest megakernel body: one row-haloed slab -> outputs, per
+    (app, row-tile) grid step.
 
-    The whole Pixie data path runs inside the kernel instance: the frame
-    block is zero-padded and sliced into the tap bank (line-buffer
-    formation; offsets are trace-time constants), each memory-VC channel
-    *selects* its producer from the bank via the SMEM tap_sel row (ingest
-    plans are runtime settings, like VC muxes), then the conventional PE
-    pipeline executes on the channels -- all without the frame ever leaving
-    VMEM.
+    The whole Pixie data path runs inside the kernel instance: the slab
+    (``[tile_rows + 2*radius, W]``; halo rows are real neighbours
+    mid-frame, zeros at the frame border -- pre-sliced on the host side of
+    the pallas_call) is column-padded and sliced into the tap bank
+    (line-buffer formation; offsets are trace-time constants), each
+    memory-VC channel *selects* its producer from the bank via the SMEM
+    tap_sel row (ingest plans are runtime settings, like VC muxes), then
+    the conventional PE pipeline executes on the channels -- all without
+    the slab ever leaving VMEM.  The untiled layout is simply the single
+    slab covering the whole frame.
     """
     i = pl.program_id(0)
-    img = img_ref[0]                    # [H, W] raw frame
-    H, W = img.shape
-    dtype = img.dtype
+    slab = slab_ref[0, 0]               # [tile_rows + 2r, W] haloed rows
+    S, W = slab.shape
+    dtype = slab.dtype
     r = radius
-    padded = jnp.pad(img, ((r, r), (r, r)))
+    tr = S - 2 * r                      # output rows of this tile
+    padded = jnp.pad(slab, ((0, 0), (r, r)))   # columns only; rows travel
     taps = [
-        padded[r + dj : r + dj + H, r + di : r + di + W].reshape(H * W)
+        padded[r + dj : r + dj + tr, r + di : r + di + W].reshape(tr * W)
         for dj, di in tap_offsets(radius)
     ]
-    taps.append(jnp.zeros((H * W,), dtype))    # const/padding producer row
-    bank = jnp.stack(taps, axis=0)             # [T+1, H*W]
+    taps.append(jnp.zeros((tr * W,), dtype))   # const/padding producer row
+    bank = jnp.stack(taps, axis=0)             # [T+1, tile_rows*W]
     zero_row = len(taps) - 1
     consts = const_ref[0]                      # [C] in grid dtype
     chans = []
@@ -291,7 +303,7 @@ def _fused_batched_body(
         t = tap_sel_ref[i, c]
         row = jax.lax.dynamic_index_in_dim(bank, t, 0, keepdims=False)
         chans.append(jnp.where(t == zero_row, consts[c], row))
-    x = jnp.stack(chans, axis=0)               # [C, H*W] memory-VC channels
+    x = jnp.stack(chans, axis=0)               # [C, tile_rows*W] channels
     prev = _level_pipeline(grid, (i,), op_ref, sel_ref, x)
     o_ref[0] = _gather_outputs(grid, (i,), outsel_ref, prev, dtype)
 
@@ -303,10 +315,12 @@ def vcgra_fused_batched(
     ingests: Tuple[jnp.ndarray, jnp.ndarray],
     images: jnp.ndarray,
     interpret: Optional[bool] = None,
+    tile_rows=None,
 ) -> jnp.ndarray:
     """Batched fused-ingest megakernel: N raw frames, N tenants, ONE
     pallas_call -- the Pallas twin of
-    ``interpreter.batched_fused_overlay_step``.
+    ``interpreter.batched_fused_overlay_step`` (and of its row-tiled twin
+    when ``tile_rows`` is set).
 
     ``settings``: dense banks (ops [N, L, max_w], sel [N, L, max_w, 2],
     out_sel [N, K]); ``ingests``: (tap_sel int32 [N, C], const_vals [N, C]
@@ -315,43 +329,71 @@ def vcgra_fused_batched(
     for frames arriving in another dtype).  Returns [N, num_outputs, H*W]
     in the grid dtype.
 
-    Blocking: one full frame per kernel instance (grid iterates the app
-    axis), so VMEM holds ``O((T+1 + max_level_width) * H * W)`` elements.
-    Pixel-axis tiling would need a row halo exchange between blocks and is
-    deferred until a real-TPU profile justifies it (see DESIGN.md).
+    Blocking: the pallas grid iterates (app, row-tile).  ``tile_rows``
+    (int, ``tiling.TILE_AUTO`` or None = whole frame) fixes the tile
+    height; each tile's input block is a ``[tile_rows + 2*radius, W]``
+    slab whose halo rows are pre-sliced from the zero-row-padded frame
+    (an HBM read amplification of ``2*radius/tile_rows``), so VMEM holds
+    only ``O((T+1 + max_level_width) * tile_rows * W)`` elements at a time
+    instead of the whole frame + tap bank.  ``tile_rows`` not dividing H
+    is padded with zero rows and sliced back -- bitwise-exact, the padding
+    is read only as the bottom halo.
     """
     interpret = _resolve_interpret(interpret)
     ops_arr, sel_arr, out_sel = settings
     tap_sel, const_vals = ingests
     images = jnp.asarray(images, grid.dtype)
     n_apps, H, W = images.shape
+    r = radius
+    tr = resolve_tile_rows(tile_rows, H, W, r, grid)
+    if not interpret and tile_rows == TILE_AUTO and tr < H:
+        # The heuristic pick is an arbitrary int, but the compiled path
+        # needs a lane-aligned pixel block: round the AUTO tile down to a
+        # multiple of LANE/gcd(W, LANE), which guarantees (tr*W) % LANE
+        # == 0 while only shrinking the working set.  Explicit tile
+        # heights are the caller's choice and keep the loud assert below.
+        g = LANE // math.gcd(W, LANE)
+        tr = max(g, tr - tr % g)
+    n_tiles = num_row_tiles(H, tr)
+    Hp = n_tiles * tr
     # The compiled (real-TPU) path has never been profiled and needs a
     # lane-aligned pixel block; fail with a clear message instead of an
     # obscure Mosaic lowering error.  The fleet's pow-2 canvas bucketing
-    # (min side 16) satisfies this; direct callers must pad the canvas.
-    # Interpret mode (CPU/GPU CI) has no layout constraint.
-    assert interpret or (H * W) % LANE == 0, (
-        f"compiled megakernel needs a lane-aligned frame block: "
-        f"H*W={H}*{W}={H * W} is not a multiple of {LANE}; pad the canvas "
-        f"(the fleet's pow-2 bucketing does) or pass interpret=True"
+    # (min side 16) satisfies this for the untiled layout and, with the
+    # rounding above, for AUTO tiling; explicit tiled callers must pick
+    # lane-friendly tile heights themselves.  Interpret mode (CPU/GPU CI)
+    # has no layout constraint.
+    assert interpret or (tr * W) % LANE == 0, (
+        f"compiled megakernel needs a lane-aligned pixel block: "
+        f"tile_rows*W={tr}*{W}={tr * W} is not a multiple of {LANE}; pad "
+        f"the canvas (the fleet's pow-2 bucketing does), pick another "
+        f"tile_rows, or pass interpret=True"
     )
+    # Host side of the pallas_call: the shared halo math
+    # (tiling.halo_row_slabs -- one definition with the XLA tiled twin)
+    # pre-slices the overlapping [N, n_tiles, tile_rows + 2r, W] slabs
+    # the block pipeline streams HBM -> VMEM.
+    slabs = halo_row_slabs(images, tr, r)
     body = functools.partial(_fused_batched_body, grid, radius)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,          # tap_sel, ops, sel, out_sel -> SMEM
-        grid=(n_apps,),
+        grid=(n_apps, n_tiles),
         in_specs=[
-            pl.BlockSpec((1, grid.num_inputs), lambda i, *_: (i, 0)),
-            pl.BlockSpec((1, H, W), lambda i, *_: (i, 0, 0)),
+            pl.BlockSpec((1, grid.num_inputs), lambda i, t, *_: (i, 0)),
+            pl.BlockSpec((1, 1, tr + 2 * r, W), lambda i, t, *_: (i, t, 0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, grid.num_outputs, H * W), lambda i, *_: (i, 0, 0)
+            # Row-major flattening makes tile t's pixels contiguous: block
+            # t of the pixel axis IS the tile's [tile_rows, W] rows.
+            (1, grid.num_outputs, tr * W), lambda i, t, *_: (i, 0, t)
         ),
     )
-    return pl.pallas_call(
+    y = pl.pallas_call(
         body,
         out_shape=jax.ShapeDtypeStruct(
-            (n_apps, grid.num_outputs, H * W), images.dtype
+            (n_apps, grid.num_outputs, Hp * W), images.dtype
         ),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(tap_sel, ops_arr, sel_arr, out_sel, const_vals, images)
+    )(tap_sel, ops_arr, sel_arr, out_sel, const_vals, slabs)
+    return y[:, :, : H * W] if Hp != H else y

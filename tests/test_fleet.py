@@ -359,3 +359,48 @@ def test_frontend_tick_latency_accounting(rng):
     np.testing.assert_array_equal(
         svc.take(t), apps.conv2d_reference(img, apps.LAPLACE)
     )
+
+
+# -- async (double-buffered) ingest -------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_async_ingest_bitwise_mixed_flushes(backend, rng):
+    """ingest="async" == ingest="sync", bitwise, under repeated mixed
+    fused/channel flushes -- the double-buffered pipeline (pooled donated
+    canvases, lazy output slicing) changes buffer lifetime only, never
+    values.  The repeat flushes exercise the canvas pool rotation while
+    the previous dispatch's lazy outputs may still be in flight."""
+    grid = sobel_grid()
+    images = [rng.integers(0, 256, hw).astype(np.int32)
+              for hw in [(6, 9), (11, 5), (3, 8)]]
+    x = rng.integers(0, 256, (23,)).astype(np.int32)
+    reqs = [FleetRequest(app=n, image=i)
+            for n, i in zip(["sobel_x", "sharpen", "identity"], images)]
+    reqs.append(FleetRequest(app="threshold", inputs={"p11": x}))
+
+    ref = PixieFleet(default_grid=grid, backend=backend).run_many(reqs)
+    fleet = PixieFleet(default_grid=grid, backend=backend, ingest="async")
+    for _ in range(3):
+        got = fleet.run_many(reqs)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert fleet.stats.ingest == "async"
+    # round 2+ reuse the pooled canvas instead of allocating
+    assert fleet.stats.canvas_pool_hits >= 1
+    # every dispatch is stamped with the async plan key segment
+    assert all("async" in k for k in fleet.stats.dispatch_plans)
+
+
+def test_frontend_ingest_kwarg_and_conflict(rng):
+    svc = FleetFrontend(ingest="async")
+    assert svc.ingest == "async" and svc.fleet.ingest == "async"
+    img = rng.integers(0, 256, (4, 6)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(svc.process("laplace", img)),
+        apps.conv2d_reference(img, apps.LAPLACE),
+    )
+    with pytest.raises(ValueError, match="conflicts"):
+        FleetFrontend(fleet=PixieFleet(ingest="sync"), ingest="async")
+    with pytest.raises(ValueError, match="unknown ingest"):
+        FleetFrontend(ingest="dma")

@@ -1,0 +1,35 @@
+"""Grep-style lint: the deprecated ``make_*_overlay_fn`` factories must
+have zero call sites under ``src/`` or ``benchmarks/``.
+
+PR 4 collapsed the factory matrix into ``OverlayPlan`` + ``compile_plan``
+and left the factories as DeprecationWarning shims; this test keeps that
+deprecation from regressing -- production and benchmark code must build
+plans, never call the shims.  (``tests/`` is exempt: the shim-parity
+tests in test_plan.py/test_ingest.py call them on purpose.)
+"""
+
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCOPES = ("src", "benchmarks")
+# A call site: the factory name followed by an open paren.  The negative
+# lookbehind exempts the shim *definitions* in core/interpreter.py; bare
+# name mentions (docstrings, deprecation messages) carry no paren and
+# never match.
+CALL_SITE = re.compile(r"(?<!def )\bmake_(?:batched_)?(?:fused_)?overlay_fn\s*\(")
+
+
+def test_no_legacy_factory_call_sites():
+    offenders = []
+    for scope in SCOPES:
+        for path in sorted((REPO / scope).rglob("*.py")):
+            text = path.read_text(encoding="utf-8")
+            for m in CALL_SITE.finditer(text):
+                line = text.count("\n", 0, m.start()) + 1
+                offenders.append(f"{path.relative_to(REPO)}:{line}")
+    assert not offenders, (
+        "deprecated make_*_overlay_fn shims called from production/bench "
+        "code -- build an OverlayPlan and call compile_plan instead: "
+        + ", ".join(offenders)
+    )

@@ -1,0 +1,51 @@
+"""Property-based tests (hypothesis): the row-tiled fused executors must
+be bitwise identical to the untiled XLA oracle for *random*
+``(H, W, radius, tile_rows)`` -- including ``tile_rows`` that do not
+divide H, ``tile_rows >= H``, and radius-0 (single-tap) bank layouts --
+over random runtime ingest settings, on both backends.
+
+The deterministic edge-case sweep twin (same assertion body, fixed
+corners) lives in test_tiling.py and runs even without the dev
+dependency.
+"""
+
+import pytest
+
+# Gate rather than hard-import: hypothesis is a dev dependency
+# (requirements-dev.txt), absent from minimal runtime installs.
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-dev.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_tiling import assert_tiled_equals_untiled  # noqa: E402
+
+
+@st.composite
+def tiled_cases(draw):
+    """Random (H, W, radius, tile_rows, n, seed) covering tile_rows that
+    do not divide H, tile_rows >= H, and radius-0 grids by construction
+    of the ranges."""
+    H = draw(st.integers(1, 18))
+    W = draw(st.integers(1, 18))
+    radius = draw(st.integers(0, 2))
+    tile_rows = draw(st.integers(1, H + 4))
+    n = draw(st.integers(1, 3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return H, W, radius, tile_rows, n, seed
+
+
+@settings(max_examples=30, deadline=None)
+@given(tiled_cases())
+def test_property_tiled_equals_untiled_xla(case):
+    H, W, radius, tile_rows, n, seed = case
+    assert_tiled_equals_untiled(H, W, radius, tile_rows, n, seed, "xla")
+
+
+# The pallas megakernel runs in interpret mode on CPU CI (slower per
+# example); fewer examples, same strategy space.
+@settings(max_examples=8, deadline=None)
+@given(tiled_cases())
+def test_property_tiled_equals_untiled_pallas(case):
+    H, W, radius, tile_rows, n, seed = case
+    assert_tiled_equals_untiled(H, W, radius, tile_rows, n, seed, "pallas")
