@@ -5,14 +5,17 @@
   sobel_throughput   Sec. IV demo (four execution paths of the same Sobel)
   roofline_table     arch x shape roofline from dry-run artifacts (§Roofline)
   fleet_throughput   multi-tenant batched overlay vs sequential dispatch
+  serving_latency    streaming front-end latency percentiles at offered load
 
 Prints ``name,us_per_call,derived`` CSV rows at the end for machine
 consumption, after the human-readable tables.
 
 ``--check`` additionally enforces the fleet-throughput floors (batched
-dispatch and fused e2e both >= 2x) and writes the fleet BENCH JSON to the
-stable ``artifacts/bench/BENCH_fleet.json`` path so CI runs accumulate a
-throughput trajectory under one artifact name.
+dispatch and fused e2e both >= 2x) and the serving-latency floors (p99
+bounded at smoke load, zero deadline misses, partial tiles under deadline
+pressure), and writes the BENCH JSONs to the stable
+``artifacts/bench/BENCH_fleet.json`` / ``artifacts/bench/BENCH_serving.json``
+paths so CI runs accumulate trajectories under one artifact name each.
 """
 
 from __future__ import annotations
@@ -23,6 +26,7 @@ import time
 import traceback
 
 BENCH_FLEET_JSON = "artifacts/bench/BENCH_fleet.json"
+BENCH_SERVING_JSON = "artifacts/bench/BENCH_serving.json"
 
 
 def main(argv=None) -> None:
@@ -34,7 +38,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (
         compile_time, fleet_throughput, resource_table, roofline_table,
-        sobel_throughput,
+        serving_latency, sobel_throughput,
     )
 
     csv_rows = [("name", "us_per_call", "derived")]
@@ -124,6 +128,27 @@ def main(argv=None) -> None:
     except (Exception, SystemExit) as e:
         traceback.print_exc()
         failures.append(("fleet_throughput", e))
+
+    print()
+    print("=" * 72)
+    print("Benchmark 6: serving latency (streaming front-end, offered load)")
+    print("=" * 72)
+    try:
+        serving_args = ["--smoke"]
+        if args.check:
+            serving_args += ["--check", "--out", BENCH_SERVING_JSON]
+        r = serving_latency.main(serving_args)
+        lat = r["loaded"]["latency"]
+        csv_rows.append((
+            "serving/p99_total",
+            f"{1e6 * lat['total_s']['p99']:.1f}",
+            f"p50={1e3*lat['total_s']['p50']:.2f}ms;"
+            f"misses={lat['deadline_misses']};"
+            f"partial_tiles={r['deadline']['partial_tile_dispatches']}",
+        ))
+    except (Exception, SystemExit) as e:
+        traceback.print_exc()
+        failures.append(("serving_latency", e))
 
     print()
     print("name,us_per_call,derived")

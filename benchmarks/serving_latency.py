@@ -1,0 +1,244 @@
+"""Benchmark 6 — serving latency percentiles at fixed offered load.
+
+The throughput bench (fleet_throughput) measures how fast the fleet can
+chew a closed-loop batch; this bench measures what a *user* of the
+streaming service experiences: an open-loop arrival process at a fixed
+offered load is replayed against the continuous-batching
+``StreamingFrontend`` and per-request queue/flush/total latency
+percentiles (p50/p95/p99), deadline-miss counts and shed counts are
+recorded -- the "millions of users" axis the ROADMAP said nothing in the
+repo measured.
+
+Three measured sections:
+
+  loaded      N requests arriving at ``--rate`` req/s with a generous SLO:
+              the p50/p95/p99 of queue_s / flush_s / total_s under
+              continuous batching.  ``--check`` bounds p99 total at smoke
+              load and requires ZERO deadline misses (the SLO is trivial
+              by construction -- missing it means the scheduler sat on
+              work).
+  deadline    a deadline-constrained trickle (fewer requests than the
+              batch tile, linger effectively disabled): the scheduler
+              MUST launch partially-filled tiles to meet the SLO --
+              asserted via ``FleetStats.partial_tile_dispatches``.
+  parity      the same request trace through the streaming and the
+              synchronous front-ends must be bitwise identical (batch
+              composition is a latency decision, never a values one).
+
+Emits a ``BENCH {json}`` line and (``--out``) the JSON artifact CI
+uploads as ``BENCH_serving.json``.
+
+Usage:
+  python benchmarks/serving_latency.py                  # full run
+  python benchmarks/serving_latency.py --smoke          # CI-sized (<60 s)
+  python benchmarks/serving_latency.py --smoke --check  # enforce floors
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import sobel_grid
+from repro.runtime.fleet import PixieFleet
+from repro.serve import FleetFrontend, StreamingFrontend
+
+MIX = ["sobel_x", "sobel_y", "sharpen", "laplace", "threshold", "identity"]
+
+# --check floors.  Smoke load is far below saturation and the overlay is
+# pre-compiled before measuring, so p99 total latency is queue wait + a
+# few small-frame flushes; 1.5 s only guards against the scheduler
+# sitting on work (a lost wakeup, a starved linger) on a noisy CI host.
+SMOKE_P99_TOTAL_S = 1.5
+SMOKE_DEADLINE_S = 30.0     # trivial SLO: any miss is a scheduler bug
+
+
+def _trace(n: int, side: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [
+        (MIX[i % len(MIX)],
+         rng.integers(0, 256, (side, side)).astype(np.int32))
+        for i in range(n)
+    ]
+
+
+def run_loaded(n_requests: int, rate_hz: float, side: int,
+               target_batch: int) -> dict:
+    """Open-loop replay at fixed offered load against a warmed streaming
+    front-end; returns the LatencyStats summary plus fleet counters."""
+    trace = _trace(n_requests, side)
+    fleet = PixieFleet(default_grid=sobel_grid(), batch_tile=target_batch)
+    with StreamingFrontend(fleet=fleet, target_batch=target_batch,
+                           max_queue=4 * n_requests) as svc:
+        svc.process(MIX[0], trace[0][1])          # compile outside the clock
+        svc.latency.reset()
+        handles = []
+        t0 = time.perf_counter()
+        for i, (name, img) in enumerate(trace):
+            # open loop: arrivals are scheduled by the load generator,
+            # not by service completions
+            target = t0 + i / rate_hz
+            delay = target - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            handles.append(svc.submit(name, img, deadline_s=SMOKE_DEADLINE_S))
+        for h in handles:
+            h.result(timeout=300)
+        makespan = time.perf_counter() - t0
+        summary = svc.latency.summary()
+    return {
+        "n_requests": n_requests,
+        "offered_load_req_per_s": rate_hz,
+        "achieved_req_per_s": n_requests / makespan,
+        "frame": [side, side],
+        "target_batch": target_batch,
+        "makespan_s": makespan,
+        "latency": summary,
+        "est_flush_s": svc.est_flush_s,
+        "fleet": {
+            "dispatches": fleet.stats.dispatches,
+            "partial_tile_dispatches": fleet.stats.partial_tile_dispatches,
+            "padded_app_slots": fleet.stats.padded_app_slots,
+        },
+    }
+
+
+def run_deadline(side: int, target_batch: int) -> dict:
+    """Deadline-constrained trickle: fewer requests than the tile, linger
+    long enough that only the deadline trigger can fire -- the scheduler
+    must launch partial tiles, and they must not miss the (loose) SLO."""
+    trace = _trace(3, side, seed=1)
+    fleet = PixieFleet(default_grid=sobel_grid(), batch_tile=target_batch)
+    with StreamingFrontend(fleet=fleet, target_batch=target_batch,
+                           max_linger_s=60.0) as svc:
+        svc.process(MIX[0], trace[0][1])
+        svc.latency.reset()
+        partial0 = fleet.stats.partial_tile_dispatches
+        handles = [svc.submit(n, img, deadline_s=1.0) for n, img in trace]
+        jobs = [h.job(timeout=300) for h in handles]
+        summary = svc.latency.summary()
+    partial = fleet.stats.partial_tile_dispatches - partial0
+    return {
+        "n_requests": len(trace),
+        "deadline_s": 1.0,
+        "partial_tile_dispatches": partial,
+        "deadline_misses": summary["deadline_misses"],
+        "latency": summary,
+        "flush_seqs": sorted({j.flush_seq for j in jobs}),
+    }
+
+
+def run_parity(side: int) -> dict:
+    """Same trace through both front-ends: outputs must be bitwise equal."""
+    trace = _trace(8, side, seed=2)
+    sync = FleetFrontend(fleet=PixieFleet(default_grid=sobel_grid()))
+    ref = sync.process_batch(trace)
+    with StreamingFrontend(
+        fleet=PixieFleet(default_grid=sobel_grid()), target_batch=3,
+    ) as svc:
+        handles = [svc.submit(n, img, priority=i % 2)
+                   for i, (n, img) in enumerate(trace)]
+        outs = [h.result(timeout=300) for h in handles]
+        dispatches = svc.stats.dispatches
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    return {
+        "n_requests": len(trace),
+        "streaming_dispatches": dispatches,
+        "bitwise_equal": True,
+    }
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    p.add_argument("--n-requests", type=int, default=None)
+    p.add_argument("--rate", type=float, default=None,
+                   help="offered load in requests/s")
+    p.add_argument("--image", type=int, default=32, help="square frame side")
+    p.add_argument("--target-batch", type=int, default=8)
+    p.add_argument("--out", type=str, default=None, help="write BENCH JSON here")
+    p.add_argument("--check", action="store_true",
+                   help="exit nonzero unless p99 total <= "
+                        f"{SMOKE_P99_TOTAL_S}s at smoke load, zero deadline "
+                        "misses at trivial load, partial tiles launched "
+                        "under deadline pressure, and streaming == sync "
+                        "bitwise")
+    a = p.parse_args(argv)
+
+    n_requests = a.n_requests or (48 if a.smoke else 256)
+    rate = a.rate or (200.0 if a.smoke else 400.0)
+
+    loaded = run_loaded(n_requests, rate, a.image, a.target_batch)
+    deadline = run_deadline(a.image, a.target_batch)
+    parity = run_parity(a.image)
+
+    result = {
+        "bench": "serving_latency",
+        "grid": sobel_grid().name,
+        "loaded": loaded,
+        "deadline": deadline,
+        "parity": parity,
+        "floors": {
+            "p99_total_s": SMOKE_P99_TOTAL_S,
+            "deadline_misses": 0,
+        },
+    }
+
+    lat = loaded["latency"]
+    print(f"serving latency: {n_requests} requests @ {rate:.0f} req/s offered, "
+          f"{a.image}x{a.image} px, tile {a.target_batch}")
+    for key in ("queue_s", "flush_s", "total_s"):
+        q = lat[key]
+        print(f"  {key:8s}  p50 {1e3*q['p50']:7.2f} ms   "
+              f"p95 {1e3*q['p95']:7.2f} ms   p99 {1e3*q['p99']:7.2f} ms   "
+              f"max {1e3*q['max']:7.2f} ms")
+    print(f"  achieved   {loaded['achieved_req_per_s']:.1f} req/s over "
+          f"{loaded['fleet']['dispatches']} dispatches "
+          f"({loaded['fleet']['partial_tile_dispatches']} partial tiles); "
+          f"misses {lat['deadline_misses']}/{lat['with_deadline']}, "
+          f"shed {lat['shed']}")
+    print(f"  deadline   {deadline['partial_tile_dispatches']} partial-tile "
+          f"launch(es) under a {deadline['deadline_s']}s SLO, "
+          f"{deadline['deadline_misses']} miss(es)")
+    print(f"  parity     streaming == sync bitwise over "
+          f"{parity['n_requests']} ragged requests "
+          f"({parity['streaming_dispatches']} streaming dispatches)")
+
+    print("BENCH " + json.dumps(result))
+    if a.out:
+        os.makedirs(os.path.dirname(a.out) or ".", exist_ok=True)
+        with open(a.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {a.out}")
+
+    if a.check:
+        fails = []
+        p99 = lat["total_s"]["p99"]
+        if p99 > SMOKE_P99_TOTAL_S:
+            fails.append(f"p99 total {p99:.3f}s > {SMOKE_P99_TOTAL_S}s floor")
+        if lat["deadline_misses"] != 0:
+            fails.append(
+                f"{lat['deadline_misses']} deadline miss(es) at a trivial "
+                f"{SMOKE_DEADLINE_S}s SLO"
+            )
+        if lat["shed"] != 0:
+            fails.append(f"{lat['shed']} request(s) shed below saturation")
+        if deadline["partial_tile_dispatches"] < 1:
+            fails.append("deadline pressure launched no partial tiles")
+        if deadline["deadline_misses"] != 0:
+            fails.append(
+                f"{deadline['deadline_misses']} miss(es) of the "
+                f"{deadline['deadline_s']}s deadline-section SLO"
+            )
+        if fails:
+            raise SystemExit("FAIL: " + "; ".join(fails))
+    return result
+
+
+if __name__ == "__main__":
+    main()

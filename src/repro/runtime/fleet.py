@@ -64,20 +64,10 @@ from repro.core import interpreter
 from repro.core.bitstream import VCGRAConfig
 from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
-from repro.core.ingest import IngestPlan, check_ingest
+from repro.core.ingest import IngestPlan, ReadinessProbe, check_ingest
 from repro.core.pixie import map_app
 from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan
 from repro.core.tiling import TILE_AUTO, check_tile_rows, pow2_bucket, round_up
-
-
-def _all_ready(x) -> bool:
-    """Has an in-flight dispatch's output materialized?  (jax.Array grew
-    ``is_ready`` in 0.4.x; default to "ready" on runtimes without it so
-    overlap accounting degrades to zero rather than lying.)"""
-    try:
-        return bool(x.is_ready())
-    except AttributeError:
-        return True
 
 
 class LRUCache:
@@ -144,17 +134,21 @@ class FleetStats:
     ingest: str = "sync"         # ingest pipelining mode of every dispatch
     # Host-side packing time that ran while a previous dispatch was still
     # executing on device (async ingest only): the double-buffer overlap
-    # the sync path cannot have.  Lower bound: XLA:CPU's is_ready() is
-    # optimistic (reports ready while the async-dispatched computation is
-    # still running), so on CPU this undercounts toward 0 even when the
-    # overlap is real -- the BENCH frames sweep measures the win end to
-    # end instead.
+    # the sync path cannot have.  Completion is observed through
+    # core.ingest.ReadinessProbe -- a truthful zero-timeout check even on
+    # XLA:CPU, whose is_ready() is optimistic -- so serving dashboards can
+    # trust this number on every platform.
     ingest_overlap_s: float = 0.0
     canvas_pool_hits: int = 0    # frame canvases reused instead of allocated
     submitted: int = 0
     executed: int = 0
     dispatches: int = 0          # batched overlay launches
     fused_dispatches: int = 0    # of which took the fused-ingest path
+    # Dispatches launched with fewer real requests than the app tile --
+    # the continuous-batching scheduler fires these when a deadline
+    # approaches rather than waiting for a full tile, and the serving
+    # bench asserts they actually happen under deadline pressure.
+    partial_tile_dispatches: int = 0
     padded_app_slots: int = 0    # wasted N-axis slots from tile rounding
     map_calls: int = 0           # place/route runs (config-cache misses)
     config_cache_hits: int = 0
@@ -256,9 +250,10 @@ class PixieFleet:
         # sizes / frame buckets drift would otherwise pin two full
         # canvases per distinct shape forever.
         self._canvas_pool = LRUCache(8)
-        # Most recent dispatch output (async): overlap accounting checks
-        # whether it is still in flight when the next pack starts.
-        self._inflight = None
+        # Readiness probe on the most recent dispatch output (async):
+        # overlap accounting checks whether it is still in flight when the
+        # next pack starts -- truthfully, even on XLA:CPU.
+        self._inflight: Optional[ReadinessProbe] = None
         # Jitted group unpackers for the async fused path, keyed by the
         # item shapes: ONE lazy dispatch slices every tenant's [H, W]
         # window out of the canvas outputs (per-item eager slicing costs
@@ -535,11 +530,13 @@ class PixieFleet:
     def _note_overlap(self, pack_started: float) -> None:
         """Credit host-side pack time to ``ingest_overlap_s`` when it ran
         concurrently with a still-executing previous dispatch -- and drop
-        the in-flight reference once observed complete, so a past flush's
-        output buffers are not pinned for the sake of a stats probe."""
+        the in-flight probe once it observes completion, so a past flush's
+        output buffers are not pinned for the sake of a stats probe.  The
+        probe is truthful on every platform (see
+        :class:`repro.core.ingest.ReadinessProbe`)."""
         if self._inflight is None:
             return
-        if _all_ready(self._inflight):
+        if self._inflight.ready():
             self._inflight = None
         else:
             self.stats.ingest_overlap_s += time.perf_counter() - pack_started
@@ -613,6 +610,7 @@ class PixieFleet:
         # Tile padding on the app axis: replay config[0] on a zero frame.
         configs += [configs[0]] * (n_tile - n)
         self.stats.padded_app_slots += n_tile - n
+        self.stats.partial_tile_dispatches += 1 if n < n_tile else 0
 
         stacked, ingests = self._stacked_bank(grid, configs, fused=True)
         if self.ingest == "async":
@@ -639,7 +637,7 @@ class PixieFleet:
             unpack = self._fused_unpack(tuple(p.hw for _, p in items), Hb, Wb)
             for (ticket, _), y in zip(items, unpack(ys)):
                 out[ticket] = y
-            self._inflight = ys
+            self._inflight = ReadinessProbe(ys)
         else:
             for i, (ticket, p) in enumerate(items):
                 H, W = p.hw
@@ -668,6 +666,7 @@ class PixieFleet:
         configs += [configs[0]] * (n_tile - n)
         xs += [jnp.zeros_like(xs[0])] * (n_tile - n)
         self.stats.padded_app_slots += n_tile - n
+        self.stats.partial_tile_dispatches += 1 if n < n_tile else 0
         stacked = self._stacked_bank(grid, configs)
         xstack = jnp.stack(xs)
         self._note_overlap(t0)
@@ -685,7 +684,7 @@ class PixieFleet:
             )
             for (ticket, _), y in zip(items, unpack(ys)):
                 out[ticket] = y
-            self._inflight = ys
+            self._inflight = ReadinessProbe(ys)
         else:
             for i, (ticket, p) in enumerate(items):
                 y = np.asarray(ys[i, :, : p.payload.shape[-1]])
@@ -696,10 +695,28 @@ class PixieFleet:
                 out[ticket] = y
         self.timings["dispatch_s"] += time.perf_counter() - t0
 
-    def flush(self) -> Dict[int, np.ndarray]:
-        """Run every pending request; one overlay dispatch per grid group
+    def pending_count(self) -> int:
+        """Requests submitted but not yet flushed (the continuous-batching
+        scheduler polls this to decide between waiting for a full tile and
+        launching a partial one)."""
+        return len(self._pending)
+
+    def flush(self, limit: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Run pending requests; one overlay dispatch per grid group
         (two when a group mixes fused image requests with named-channel
         requests).
+
+        ``limit`` is the partial-tile hook for continuous-batching
+        schedulers: only the oldest ``limit`` pending requests are
+        dispatched (in submit order) and the rest stay queued for a later
+        flush -- a deadline-pressed scheduler launches a partially-filled
+        tile now without dragging every newly-arrived request into it.
+        ``None`` keeps the drain-everything behavior.
+
+        Per-flush latency stamps land in ``timings``: ``flush_started``
+        (perf_counter at dispatch start, shared by every request in the
+        flush -- front-ends split per-request queue wait from flush time
+        with it) and ``flush_s`` (wall duration of this flush).
 
         Returns {ticket: output}; image requests come back as [H, W] (or
         [num_outputs, H, W]), channel requests as [num_outputs, batch].
@@ -707,7 +724,12 @@ class PixieFleet:
         arrays (bitwise-identical values, forced on first host read) so
         the device keeps executing while the caller packs its next batch.
         """
-        pending, self._pending = self._pending, []
+        if limit is None or limit >= len(self._pending):
+            pending, self._pending = self._pending, []
+        else:
+            if limit < 1:
+                raise ValueError(f"flush limit must be >= 1, got {limit}")
+            pending, self._pending = self._pending[:limit], self._pending[limit:]
         # Group by (grid, path): fused image groups additionally key on the
         # stencil radius, which fixes the tap-bank layout of the executable.
         groups: Dict[Tuple, List[Tuple[int, _Prepared]]] = {}
@@ -720,6 +742,7 @@ class PixieFleet:
 
         out: Dict[int, np.ndarray] = {}
         t0 = time.perf_counter()
+        self.timings["flush_started"] = t0
         for key, items in groups.items():
             if key[1] == "image":
                 self._dispatch_fused(key[0], key[2], items, out)

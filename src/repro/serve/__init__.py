@@ -1,4 +1,13 @@
 from repro.serve.engine import ServeConfig, ServeEngine, SlotServer
-from repro.serve.fleet_frontend import FleetFrontend, ImageJob
+from repro.serve.fleet_frontend import FleetFrontend
+from repro.serve.service import (
+    AdmissionError, ImageJob, ImageService, JobHandle, LatencyStats,
+)
+from repro.serve.streaming import StreamingFrontend
 
-__all__ = ["ServeConfig", "ServeEngine", "SlotServer", "FleetFrontend", "ImageJob"]
+__all__ = [
+    "ServeConfig", "ServeEngine", "SlotServer",
+    "FleetFrontend", "StreamingFrontend",
+    "ImageService", "ImageJob", "JobHandle",
+    "LatencyStats", "AdmissionError",
+]

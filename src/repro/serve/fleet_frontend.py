@@ -1,27 +1,36 @@
-"""Serving front-end for the Pixie fleet: an image-processing service.
+"""Synchronous serving front-end for the Pixie fleet.
 
 The LM serving stack (``serve/engine.py``) batches token requests into one
 decode step; this is the same pattern for the VCGRA overlay: clients ask
 for *named image operations* ("sobel_x on this frame"), the front-end
-queues them, and each service tick drains the queue through
+queues them, and each flush drains the queue through
 :class:`repro.runtime.fleet.PixieFleet` -- one vmapped overlay dispatch
 for every distinct grid, regardless of how many different applications
 are in flight.  Frames ride the fused-ingest path end to end: the raw
 image is handed to the fleet at submit and line-buffer formation happens
-inside the batched dispatch, so a service tick is one device operation
-per grid group.
+inside the batched dispatch, so a flush is one device operation per grid
+group.
+
+The service surface is the futures API of
+:class:`repro.serve.service.ImageService`: ``submit`` returns a
+:class:`~repro.serve.service.JobHandle`, and ``result()`` on an
+undispatched handle drives the flush itself -- there is no worker thread
+here.  For a server that overlaps request arrival with dispatch and
+schedules against deadlines, use
+:class:`repro.serve.streaming.StreamingFrontend`, which implements the
+same API on the same fleet.
 
 Deliberately transport-agnostic (no HTTP server in the core library): an
-RPC layer would call :meth:`submit` on arrival and :meth:`tick` on a
-timer, exactly like ``SlotServer.tick``.
+RPC layer would call :meth:`submit` on arrival and :meth:`flush` on a
+timer, exactly like ``SlotServer``'s decode step.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
+import warnings
 from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -31,25 +40,49 @@ from repro.core.grid import GridSpec
 from repro.core.ingest import check_ingest
 from repro.core.interpreter import check_backend
 from repro.runtime.fleet import FleetRequest, PixieFleet
+from repro.serve.service import (
+    ImageJob, ImageService, JobHandle, LatencyStats, resolve_app,
+)
 
 
-@dataclasses.dataclass
-class ImageJob:
-    """A completed unit of service work (returned by ``tick``)."""
+def build_fleet(
+    fleet: Optional[PixieFleet],
+    backend: Optional[str],
+    devices: Optional[int],
+    ingest: Optional[str],
+) -> PixieFleet:
+    """Resolve a front-end's fleet: pass-through with axis-conflict checks
+    when one is provided, else a fresh fleet on the requested axes.
+    Shared by the synchronous and streaming front-ends."""
+    if backend is not None:
+        check_backend(backend)
+        if fleet is not None and fleet.backend != backend:
+            raise ValueError(
+                f"backend={backend!r} conflicts with the provided fleet's "
+                f"backend {fleet.backend!r}; configure the PixieFleet instead"
+            )
+    if devices is not None and fleet is not None and fleet.devices != devices:
+        raise ValueError(
+            f"devices={devices!r} conflicts with the provided fleet's "
+            f"devices {fleet.devices!r}; configure the PixieFleet instead"
+        )
+    if ingest is not None:
+        check_ingest(ingest)
+        if fleet is not None and fleet.ingest != ingest:
+            raise ValueError(
+                f"ingest={ingest!r} conflicts with the provided fleet's "
+                f"ingest {fleet.ingest!r}; configure the PixieFleet instead"
+            )
+    return fleet or PixieFleet(backend=backend or "xla", devices=devices,
+                               ingest=ingest or "sync")
 
-    ticket: int
-    app: str
-    output: np.ndarray
-    latency_s: float
 
-
-class FleetFrontend:
+class FleetFrontend(ImageService):
     """Queue + drain service loop over a :class:`PixieFleet`.
 
     >>> svc = FleetFrontend()
-    >>> t = svc.submit("sobel_x", img)
-    >>> done = svc.tick()           # drains the queue in one dispatch
-    >>> edge = svc.take(t)
+    >>> h = svc.submit("sobel_x", img)     # a JobHandle, not a bare ticket
+    >>> edge = h.result()                  # drains the queue in one dispatch
     """
 
     def __init__(
@@ -61,35 +94,18 @@ class FleetFrontend:
         devices: Optional[int] = None,
         ingest: Optional[str] = None,
     ):
-        if backend is not None:
-            check_backend(backend)
-            if fleet is not None and fleet.backend != backend:
-                raise ValueError(
-                    f"backend={backend!r} conflicts with the provided fleet's "
-                    f"backend {fleet.backend!r}; configure the PixieFleet instead"
-                )
-        if devices is not None and fleet is not None and fleet.devices != devices:
-            raise ValueError(
-                f"devices={devices!r} conflicts with the provided fleet's "
-                f"devices {fleet.devices!r}; configure the PixieFleet instead"
-            )
-        if ingest is not None:
-            check_ingest(ingest)
-            if fleet is not None and fleet.ingest != ingest:
-                raise ValueError(
-                    f"ingest={ingest!r} conflicts with the provided fleet's "
-                    f"ingest {fleet.ingest!r}; configure the PixieFleet instead"
-                )
-        self.fleet = fleet or PixieFleet(backend=backend or "xla",
-                                         devices=devices,
-                                         ingest=ingest or "sync")
+        self.fleet = build_fleet(fleet, backend, devices, ingest)
         # Name -> DFG factory; defaults to the paper's application library.
         self.registry = dict(registry) if registry is not None else dict(app_lib.ALL_APPS)
         self._arrivals: Dict[int, Tuple[str, float]] = {}
-        # Bounded: clients that read outputs from tick()'s ImageJob list and
-        # never take() must not leak; oldest unredeemed jobs are evicted.
+        self._handles: Dict[int, JobHandle] = {}
+        # Bounded: clients that read outputs from handles and never take()
+        # must not leak the legacy done-map; oldest unredeemed jobs are
+        # evicted (handles keep their own completed job regardless).
         self._done: "OrderedDict[int, ImageJob]" = OrderedDict()
         self.max_done = int(max_done)
+        self.latency = LatencyStats()
+        self._flush_seq = 0
 
     def available_apps(self) -> List[str]:
         return sorted(self.registry)
@@ -99,60 +115,78 @@ class FleetFrontend:
         app: Union[str, DFG],
         image: np.ndarray,
         grid: Optional[GridSpec] = None,
-    ) -> int:
-        """Enqueue one frame; returns a ticket for :meth:`take`."""
-        if isinstance(app, str):
-            if app not in self.registry:
-                raise KeyError(
-                    f"unknown app {app!r}; known: {self.available_apps()}"
-                )
-            # Library-default entries pass the NAME through so the fleet's
-            # (name, grid) config cache applies -- no per-request DFG
-            # rebuild + structural hash (~0.1 ms/request on the serving
-            # hot path).  Custom registry factories still build: the fleet
-            # only knows the library by name.
-            factory = self.registry[app]
-            name = app
-            work = app if factory is app_lib.ALL_APPS.get(app) else factory()
-        else:
-            name, work = app.name, app
+        **kwargs,
+    ) -> JobHandle:
+        """Enqueue one frame; returns a :class:`JobHandle` whose
+        ``result()`` drives the flush if it has not happened yet."""
+        if kwargs:
+            raise TypeError(
+                f"unsupported submit options {sorted(kwargs)}; deadline_s/"
+                f"priority scheduling needs the streaming front-end "
+                f"(repro.serve.StreamingFrontend)"
+            )
+        name, work = resolve_app(self.registry, app)
         ticket = self.fleet.submit(FleetRequest(app=work, image=image, grid=grid))
+        handle = JobHandle(ticket, name, kick=self.flush)
         self._arrivals[ticket] = (name, time.perf_counter())
-        return ticket
+        self._handles[ticket] = handle
+        return handle
 
-    def tick(self) -> List[ImageJob]:
-        """Drain the queue: one batched dispatch per grid group."""
+    def flush(self) -> List[ImageJob]:
+        """Drain the queue: one batched dispatch per grid group.  Resolves
+        every pending handle and records the queue/flush latency split."""
         outs = self.fleet.flush()
-        now = time.perf_counter()
+        flush_started = self.fleet.timings.get("flush_started", time.perf_counter())
+        flush_s = self.fleet.timings.get("flush_s", 0.0)
+        seq = self._flush_seq
+        self._flush_seq += 1
         jobs = []
         for ticket, output in outs.items():
             self.fleet.discard(ticket)  # the job owns the output now
             name, t_arrival = self._arrivals.pop(ticket)
-            job = ImageJob(ticket, name, output, now - t_arrival)
+            queue_s = max(0.0, flush_started - t_arrival)
+            job = ImageJob(
+                ticket, name, output,
+                queue_s=queue_s, flush_s=flush_s,
+                latency_s=queue_s + flush_s, flush_seq=seq,
+            )
+            self.latency.record(queue_s, flush_s, job.latency_s)
             self._done[ticket] = job
+            handle = self._handles.pop(ticket, None)
+            if handle is not None:
+                handle._complete(job)
             jobs.append(job)
         while len(self._done) > self.max_done:
             self._done.popitem(last=False)
         return jobs
 
-    def take(self, ticket: int) -> np.ndarray:
-        """Redeem a ticket (after the tick that served it)."""
+    # -- deprecated three-call protocol (PR 6: futures API) -----------------
+
+    def tick(self) -> List[ImageJob]:
+        """Deprecated alias of :meth:`flush` (the old queue/tick/take
+        protocol); delegates bitwise to the new path."""
+        warnings.warn(
+            "FleetFrontend tick() is deprecated: hold the JobHandle from "
+            "submit() and call result() on it, or call flush() to drain "
+            "explicitly",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.flush()
+
+    def take(self, ticket: Union[int, JobHandle]) -> np.ndarray:
+        """Deprecated ticket redemption (the old queue/tick/take
+        protocol); accepts a bare ticket or a handle and delegates to the
+        retained-job map the futures path also fills."""
+        warnings.warn(
+            "FleetFrontend take() is deprecated: call result() on the "
+            "JobHandle returned by submit()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        if isinstance(ticket, JobHandle):
+            ticket = ticket.ticket
         return self._done.pop(ticket).output
-
-    def process(self, app: Union[str, DFG], image: np.ndarray) -> np.ndarray:
-        """Synchronous single-frame convenience (still goes through the
-        batched path, so repeat calls reuse the compiled overlay)."""
-        t = self.submit(app, image)
-        self.tick()
-        return self.take(t)
-
-    def process_batch(
-        self, requests: Sequence[Tuple[Union[str, DFG], np.ndarray]]
-    ) -> List[np.ndarray]:
-        """Many (app, image) pairs in one dispatch; outputs in order."""
-        tickets = [self.submit(app, image) for app, image in requests]
-        self.tick()
-        return [self.take(t) for t in tickets]
 
     @property
     def backend(self) -> str:
@@ -177,5 +211,6 @@ class FleetFrontend:
     @property
     def timings(self):
         """Fleet timing split: cumulative ``pack_s`` (host-side input prep)
-        vs ``dispatch_s`` (device execution) plus last ``flush_s``."""
+        vs ``dispatch_s`` (device execution) plus last ``flush_s`` /
+        ``flush_started``."""
         return self.fleet.timings

@@ -1,0 +1,390 @@
+"""Threaded continuous-batching streaming front-end with SLO scheduling.
+
+The synchronous :class:`~repro.serve.fleet_frontend.FleetFrontend` only
+dispatches when a caller drives it, so nothing overlaps request arrival
+with device execution and nothing bounds tail latency.  This module is
+the serving loop the paper's economics actually ask for (cheap
+reconfiguration is only worth something if work keeps arriving while the
+fabric runs): a worker thread owns a :class:`~repro.runtime.fleet.
+PixieFleet` and continuously batches arrivals -- the maxtext
+``OfflineInference`` shape (worker thread + bounded queues +
+backpressure), adapted from token slots to overlay tiles.
+
+Scheduling model:
+
+* ``submit`` validates on the caller's thread, then enqueues into a
+  BOUNDED arrival queue.  A full queue sheds the request with a typed
+  :class:`~repro.serve.service.AdmissionError` (admission control: reject
+  loudly, never grow without bound).
+* Requests carry an optional **deadline** (``deadline_s``, relative
+  seconds -- the request's SLO) and a **priority** (higher is served
+  first).  The worker drains arrivals into a pending set and launches one
+  fleet flush when any of three triggers fires:
+
+    full tile      pending >= target_batch (the fleet's batch tile)
+    deadline       the most urgent pending deadline is within
+                   est_flush_s + deadline_margin_s of expiring -- launch a
+                   PARTIALLY-FILLED tile now rather than miss the SLO
+                   waiting for a full one (``FleetStats.
+                   partial_tile_dispatches`` counts these)
+    linger         the oldest pending request has waited max_linger_s with
+                   no new arrivals -- deadline-less traffic must not starve
+
+  ``est_flush_s`` is an EWMA of observed flush durations (seeded
+  pessimistically so the first post-compile flushes do not teach the
+  scheduler that flushes are free).
+* The batch is chosen by (priority desc, arrival order) and capped at
+  ``target_batch``; the remainder stays pending for the next trigger --
+  continuous batching, not drain-everything.
+* Per-request ``queue_s`` / ``flush_s`` / ``total_s`` land in a
+  :class:`~repro.serve.service.LatencyStats` (p50/p95/p99 + deadline-miss
+  counters) alongside the fleet's own :class:`FleetStats`.
+
+Outputs are bitwise identical to the synchronous front-end on the same
+request trace: batch composition never changes values (the fleet pads
+tiles exactly), only latency.  ``tests/test_streaming.py`` asserts it on
+ragged mixed-app traces over both backends.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core import applications as app_lib
+from repro.core.dfg import DFG
+from repro.core.grid import GridSpec
+from repro.runtime.fleet import FleetRequest, PixieFleet
+from repro.serve.fleet_frontend import build_fleet
+from repro.serve.service import (
+    AdmissionError, ImageJob, ImageService, JobHandle, LatencyStats,
+    resolve_app,
+)
+
+_STOP = object()   # arrival-queue sentinel: close() wakes the worker with it
+
+
+@dataclasses.dataclass
+class _PendingRequest:
+    """One accepted request, between arrival queue and fleet dispatch."""
+
+    seq: int                      # arrival order (FIFO tiebreak)
+    name: str
+    work: Union[str, DFG]
+    image: np.ndarray
+    grid: Optional[GridSpec]
+    priority: int
+    t_arrival: float              # perf_counter at submit
+    deadline_at: Optional[float]  # absolute perf_counter target, or None
+    deadline_s: Optional[float]   # the relative SLO as submitted
+    handle: JobHandle
+
+
+class StreamingFrontend(ImageService):
+    """Continuous-batching streaming server over a :class:`PixieFleet`.
+
+    >>> with StreamingFrontend() as svc:
+    ...     h = svc.submit("sobel_x", img, deadline_s=0.05, priority=1)
+    ...     edge = h.result(timeout=5.0)
+
+    The fleet is owned by the worker thread exclusively -- do not share a
+    fleet instance between a streaming front-end and other callers.
+
+    ``target_batch`` defaults to the fleet's ``batch_tile``; ``max_queue``
+    bounds accepted-but-unserved requests (arrival queue + pending set)
+    and is the admission-control knob; ``autostart=False`` leaves the
+    worker stopped until :meth:`start` -- tests use it to stage
+    deterministic contention.
+    """
+
+    def __init__(
+        self,
+        fleet: Optional[PixieFleet] = None,
+        registry: Optional[Dict[str, object]] = None,
+        *,
+        target_batch: Optional[int] = None,
+        max_queue: int = 256,
+        est_flush_s: float = 0.05,
+        deadline_margin_s: float = 0.002,
+        max_linger_s: float = 0.002,
+        backend: Optional[str] = None,
+        devices: Optional[int] = None,
+        ingest: Optional[str] = None,
+        autostart: bool = True,
+    ):
+        self.fleet = build_fleet(fleet, backend, devices, ingest)
+        self.registry = dict(registry) if registry is not None else dict(app_lib.ALL_APPS)
+        self.target_batch = int(target_batch or self.fleet.batch_tile)
+        if self.target_batch < 1:
+            raise ValueError(f"target_batch must be >= 1, got {target_batch}")
+        self.max_queue = int(max_queue)
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.deadline_margin_s = float(deadline_margin_s)
+        self.max_linger_s = float(max_linger_s)
+        # EWMA of observed flush wall times, used by the deadline trigger
+        # to decide how late a launch can start and still meet the SLO.
+        # Seeded pessimistically: until real flushes are observed the
+        # scheduler assumes they are slow and launches early.
+        self._est_flush_s = float(est_flush_s)
+        self.latency = LatencyStats()
+        self._queue: "queue.Queue" = queue.Queue(maxsize=self.max_queue)
+        self._seq = 0
+        self._seq_lock = threading.Lock()
+        self._flush_seq = 0
+        self._closed = False
+        self._worker: Optional[threading.Thread] = None
+        if autostart:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "StreamingFrontend":
+        """Start the worker thread (idempotent)."""
+        if self._closed:
+            raise RuntimeError("streaming front-end already closed")
+        if self._worker is None:
+            self._worker = threading.Thread(
+                target=self._run, name="pixie-streaming-worker", daemon=True
+            )
+            self._worker.start()
+        return self
+
+    def close(self, timeout: Optional[float] = 30.0) -> None:
+        """Drain everything already accepted, then stop the worker.
+        Safe to call twice; new submits after close are rejected."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._worker is None:
+            # Never started: fail the accepted-but-unserved handles so no
+            # client blocks forever on a server that will not run.
+            self._drain_failed(RuntimeError("streaming front-end closed before start"))
+            return
+        self._queue.put(_STOP)   # blocking put: the sentinel must arrive
+        self._worker.join(timeout)
+        if self._worker.is_alive():
+            raise RuntimeError(
+                f"streaming worker did not drain within {timeout} s"
+            )
+
+    def __enter__(self) -> "StreamingFrontend":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def _drain_failed(self, exc: BaseException) -> None:
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if item is not _STOP:
+                item.handle._fail(exc)
+
+    # -- client surface -----------------------------------------------------
+
+    def available_apps(self) -> List[str]:
+        return sorted(self.registry)
+
+    def submit(
+        self,
+        app: Union[str, DFG],
+        image: np.ndarray,
+        grid: Optional[GridSpec] = None,
+        *,
+        deadline_s: Optional[float] = None,
+        priority: int = 0,
+        **kwargs,
+    ) -> JobHandle:
+        """Accept one frame for streaming service.
+
+        ``deadline_s`` is the request's SLO in relative seconds: the
+        scheduler will launch a partial tile rather than let it expire
+        waiting for a full one, and :class:`LatencyStats` counts it as a
+        miss if total latency still exceeds it.  ``priority`` breaks
+        batching ties (higher is served first).  Raises
+        :class:`AdmissionError` when the bounded queue is full.
+        """
+        if kwargs:
+            raise TypeError(f"unsupported submit options {sorted(kwargs)}")
+        if self._closed:
+            raise RuntimeError("streaming front-end is closed")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        # Cheap validation on the CALLER's thread (unknown app, bad shape)
+        # so obviously-bad requests fail to their submitter immediately;
+        # mapping/grid validation happens on the worker and fails the
+        # handle instead.
+        name, work = resolve_app(self.registry, app)
+        image = np.asarray(image)
+        if image.ndim != 2:
+            raise ValueError(f"image must be [H, W], got shape {image.shape}")
+        t_arrival = time.perf_counter()
+        with self._seq_lock:
+            seq = self._seq
+            self._seq += 1
+        handle = JobHandle(seq, name)
+        pending = _PendingRequest(
+            seq=seq, name=name, work=work, image=image, grid=grid,
+            priority=int(priority), t_arrival=t_arrival,
+            deadline_at=None if deadline_s is None else t_arrival + deadline_s,
+            deadline_s=deadline_s, handle=handle,
+        )
+        try:
+            self._queue.put_nowait(pending)
+        except queue.Full:
+            self.latency.record_shed()
+            raise AdmissionError(queued=self._queue.qsize(),
+                                 bound=self.max_queue) from None
+        return handle
+
+    @property
+    def backend(self) -> str:
+        return self.fleet.backend
+
+    @property
+    def devices(self) -> int:
+        return self.fleet.devices
+
+    @property
+    def ingest(self) -> str:
+        return self.fleet.ingest
+
+    @property
+    def stats(self):
+        """The owned fleet's :class:`FleetStats` (read-only use; the
+        worker thread is the writer)."""
+        return self.fleet.stats
+
+    @property
+    def est_flush_s(self) -> float:
+        """Current flush-duration estimate the deadline trigger uses."""
+        return self._est_flush_s
+
+    # -- worker -------------------------------------------------------------
+
+    def _run(self) -> None:
+        pending: List[_PendingRequest] = []
+        stopping = False
+        while True:
+            # 1. Pull arrivals: block only as long as the launch triggers
+            # allow (deadline slack / linger), then drain without blocking.
+            timeout = self._wake_in(pending)
+            try:
+                item = self._queue.get(timeout=timeout)
+                if item is _STOP:
+                    stopping = True
+                else:
+                    pending.append(item)
+                while True:   # opportunistically drain the burst
+                    item = self._queue.get_nowait()
+                    if item is _STOP:
+                        stopping = True
+                    else:
+                        pending.append(item)
+            except queue.Empty:
+                pass
+
+            # 2. Launch decision.
+            now = time.perf_counter()
+            if pending and (
+                stopping
+                or len(pending) >= self.target_batch
+                or self._deadline_urgent(pending, now)
+                or self._lingered(pending, now)
+            ):
+                self._dispatch(self._select_batch(pending))
+            if stopping and not pending and self._queue.empty():
+                return
+
+    def _wake_in(self, pending: List[_PendingRequest]) -> float:
+        """How long the worker may block on the arrival queue before a
+        trigger needs re-evaluation."""
+        if not pending:
+            return 0.1   # idle: wake periodically (sentinel wakes us too)
+        now = time.perf_counter()
+        horizon = min(
+            (p.t_arrival + self.max_linger_s for p in pending),
+            default=now,
+        ) - now
+        slack = min(
+            (p.deadline_at - self._est_flush_s - self.deadline_margin_s
+             for p in pending if p.deadline_at is not None),
+            default=float("inf"),
+        ) - now
+        return float(min(max(min(horizon, slack), 1e-4), 0.05))
+
+    def _deadline_urgent(self, pending: List[_PendingRequest], now: float) -> bool:
+        """Would waiting any longer risk the most urgent pending SLO?
+        (The partial-tile trigger: launch when the estimated flush no
+        longer fits inside the tightest remaining deadline budget.)"""
+        budget = self._est_flush_s + self.deadline_margin_s
+        return any(
+            p.deadline_at is not None and p.deadline_at - now <= budget
+            for p in pending
+        )
+
+    def _lingered(self, pending: List[_PendingRequest], now: float) -> bool:
+        return (
+            self._queue.empty()
+            and now - min(p.t_arrival for p in pending) >= self.max_linger_s
+        )
+
+    def _select_batch(self, pending: List[_PendingRequest]) -> List[_PendingRequest]:
+        """Pop up to ``target_batch`` requests by (priority desc, arrival);
+        the rest stay pending -- continuous batching, not drain-all."""
+        pending.sort(key=lambda p: (-p.priority, p.seq))
+        batch = pending[: self.target_batch]
+        del pending[: self.target_batch]
+        return batch
+
+    def _dispatch(self, batch: List[_PendingRequest]) -> None:
+        """One fleet flush for the selected batch.  Per-request fleet
+        submit failures (unmappable app, grid mismatch) fail only their
+        own handle -- they can never poison the rest of the batch."""
+        tickets: Dict[int, _PendingRequest] = {}
+        for p in batch:
+            try:
+                t = self.fleet.submit(
+                    FleetRequest(app=p.work, image=p.image, grid=p.grid)
+                )
+            except Exception as exc:    # noqa: BLE001 -- handed to the handle
+                p.handle._fail(exc)
+                continue
+            tickets[t] = p
+        if not tickets:
+            return
+        seq = self._flush_seq
+        self._flush_seq += 1
+        try:
+            outs = self.fleet.flush()
+        except Exception as exc:        # noqa: BLE001 -- handed to the handles
+            for p in tickets.values():
+                p.handle._fail(exc)
+            return
+        flush_started = self.fleet.timings.get("flush_started", time.perf_counter())
+        flush_s = self.fleet.timings.get("flush_s", 0.0)
+        # EWMA update: the deadline trigger plans with recent reality.
+        self._est_flush_s = 0.7 * self._est_flush_s + 0.3 * flush_s
+        t_done = time.perf_counter()
+        for ticket, p in tickets.items():
+            self.fleet.discard(ticket)
+            queue_s = max(0.0, flush_started - p.t_arrival)
+            total_s = t_done - p.t_arrival
+            missed = p.deadline_s is not None and total_s > p.deadline_s
+            job = ImageJob(
+                ticket=p.seq, app=p.name, output=outs[ticket],
+                queue_s=queue_s, flush_s=flush_s, latency_s=total_s,
+                priority=p.priority, deadline_s=p.deadline_s,
+                deadline_missed=missed, flush_seq=seq,
+            )
+            self.latency.record(queue_s, flush_s, total_s,
+                                deadline_s=p.deadline_s)
+            p.handle._complete(job)

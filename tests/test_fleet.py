@@ -349,15 +349,18 @@ def test_frontend_backend_kwarg_and_conflict(rng):
         FleetFrontend(backend="")
 
 
-def test_frontend_tick_latency_accounting(rng):
+def test_frontend_flush_latency_accounting(rng):
     img = rng.integers(0, 256, (4, 6)).astype(np.int32)
     svc = FleetFrontend(fleet=PixieFleet(default_grid=sobel_grid()))
-    t = svc.submit("laplace", img)
-    jobs = svc.tick()
-    assert [j.ticket for j in jobs] == [t]
-    assert jobs[0].app == "laplace" and jobs[0].latency_s >= 0
+    h = svc.submit("laplace", img)
+    jobs = svc.flush()
+    assert [j.ticket for j in jobs] == [h.ticket]
+    assert jobs[0].app == "laplace"
+    # the PR 6 latency split: queue wait and flush time are separate
+    assert jobs[0].queue_s >= 0 and jobs[0].flush_s > 0
+    assert jobs[0].latency_s == pytest.approx(jobs[0].queue_s + jobs[0].flush_s)
     np.testing.assert_array_equal(
-        svc.take(t), apps.conv2d_reference(img, apps.LAPLACE)
+        h.result(), apps.conv2d_reference(img, apps.LAPLACE)
     )
 
 

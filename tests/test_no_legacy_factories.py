@@ -1,11 +1,19 @@
-"""Grep-style lint: the deprecated ``make_*_overlay_fn`` factories must
-have zero call sites under ``src/`` or ``benchmarks/``.
+"""Grep-style lint: deprecated surfaces must have zero call sites under
+``src/`` or ``benchmarks/``.
 
-PR 4 collapsed the factory matrix into ``OverlayPlan`` + ``compile_plan``
-and left the factories as DeprecationWarning shims; this test keeps that
-deprecation from regressing -- production and benchmark code must build
-plans, never call the shims.  (``tests/`` is exempt: the shim-parity
-tests in test_plan.py/test_ingest.py call them on purpose.)
+Two deprecations are pinned here:
+
+* PR 4 collapsed the ``make_*_overlay_fn`` factory matrix into
+  ``OverlayPlan`` + ``compile_plan`` and left the factories as
+  DeprecationWarning shims -- production and benchmark code must build
+  plans, never call the shims.
+* PR 6 replaced the image front-ends' three-call ``submit``/``tick``/
+  ``take`` protocol with the futures API (``submit`` returns a
+  ``JobHandle``); ``tick``/``take`` survive only as DeprecationWarning
+  shims on ``FleetFrontend``, and nothing in production/bench code may
+  call them.
+
+(``tests/`` is exempt: the shim-parity tests call both on purpose.)
 """
 
 import re
@@ -17,19 +25,40 @@ SCOPES = ("src", "benchmarks")
 # lookbehind exempts the shim *definitions* in core/interpreter.py; bare
 # name mentions (docstrings, deprecation messages) carry no paren and
 # never match.
-CALL_SITE = re.compile(r"(?<!def )\bmake_(?:batched_)?(?:fused_)?overlay_fn\s*\(")
+FACTORY_CALL = re.compile(r"(?<!def )\bmake_(?:batched_)?(?:fused_)?overlay_fn\s*\(")
+# Attribute calls of the deprecated front-end protocol.  The dot keeps
+# ``def tick(``/``def take(`` (the shim definitions) out; the ``np``
+# lookbehind exempts ``jnp.take(``/``np.take(`` (array gathers, a
+# different thing entirely).  The LM SlotServer keeps its own ``tick`` --
+# it has no call sites under the scanned scopes, which this lint also
+# guarantees stays true.
+PROTOCOL_CALL = re.compile(r"(?<!np)\.(?:tick|take)\s*\(")
 
 
-def test_no_legacy_factory_call_sites():
-    offenders = []
+def _offenders(pattern) -> list:
+    found = []
     for scope in SCOPES:
         for path in sorted((REPO / scope).rglob("*.py")):
             text = path.read_text(encoding="utf-8")
-            for m in CALL_SITE.finditer(text):
+            for m in pattern.finditer(text):
                 line = text.count("\n", 0, m.start()) + 1
-                offenders.append(f"{path.relative_to(REPO)}:{line}")
+                found.append(f"{path.relative_to(REPO)}:{line}")
+    return found
+
+
+def test_no_legacy_factory_call_sites():
+    offenders = _offenders(FACTORY_CALL)
     assert not offenders, (
         "deprecated make_*_overlay_fn shims called from production/bench "
         "code -- build an OverlayPlan and call compile_plan instead: "
         + ", ".join(offenders)
+    )
+
+
+def test_no_legacy_tick_take_call_sites():
+    offenders = _offenders(PROTOCOL_CALL)
+    assert not offenders, (
+        "deprecated tick/take front-end protocol called from production/"
+        "bench code -- submit() returns a JobHandle; use .result() / "
+        "flush(): " + ", ".join(offenders)
     )
