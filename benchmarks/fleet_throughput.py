@@ -56,7 +56,7 @@ from repro.core import Pixie, sobel_grid
 from repro.core import applications as apps
 from repro.core.bitstream import VCGRAConfig
 from repro.core.interpreter import pack_inputs, pad_channels
-from repro.core.tiling import TILE_AUTO, resolve_tile_rows
+from repro.core.tiling import TILE_AUTO, hbm_read_model, resolve_tile_rows
 from repro.kernels.vcgra import default_interpret
 from repro.runtime.fleet import FleetRequest, PixieFleet
 
@@ -254,11 +254,26 @@ def run_frames(n_apps: int, sizes, reps: int) -> dict:
                       sizes), ingest="sync"
       async_tiled     same tiling + the double-buffered ingest pipeline
                       (pooled donated canvases, lazy outputs)
+      pallas_tiled    the same row tiling on backend="pallas": the tiled
+                      megakernel with the PR 7 in-kernel double-buffered
+                      HBM->VMEM DMA pipeline (interpret mode off-TPU; on
+                      a TPU runner this measures the compiled
+                      pallas/xla fused-e2e ratio the ISSUE asks for)
 
-    All three are bitwise-asserted against each other before timing.
-    Timed rounds call ``jax.block_until_ready`` on the outputs, so the
-    async path's laziness is charged honestly -- its win must come from
-    real pack/execute overlap, not deferred work escaping the clock.
+    All are bitwise-asserted against each other before timing.  Timed
+    rounds call ``jax.block_until_ready`` on the outputs, so the async
+    path's laziness is charged honestly -- its win must come from real
+    pack/execute overlap, not deferred work escaping the clock.  The
+    pallas variant is timed after the interleaved loop with its own
+    (smaller) rep count: in interpret mode it is orders of magnitude off
+    and would starve the interleaving.
+
+    Each size also records an ``hbm_model`` column: the modelled
+    per-frame HBM traffic (``tiling.hbm_read_model``) of the old
+    host-pre-sliced slab layout vs the in-kernel DMA pipeline -- the
+    ``1 + 2r/tile_rows`` read amplification (paid twice: slabs written,
+    then streamed back) collapsing to ~1x seam re-reads and zero halo
+    writes.
     """
     rng = np.random.default_rng(1)
     grid = sobel_grid()
@@ -276,11 +291,23 @@ def run_frames(n_apps: int, sizes, reps: int) -> dict:
         # Larger frames amortize per-round overhead: fewer reps suffice
         # (but keep enough for the best-of estimator to settle).
         reps_side = max(8, reps // max(1, side // 32))
+        itemsize = jnp.dtype(grid.dtype).itemsize
         entry = {
             "n_apps": n_apps,
             "tile_rows": tile,
             "auto_tile_rows": resolve_tile_rows(TILE_AUTO, side, side, 1, grid),
             "reps": reps_side,
+            # Modelled per-frame HBM traffic of the two tiled lowerings
+            # at this (side, tile): the old host-pre-sliced slab tensor
+            # vs the PR 7 in-kernel DMA (seam re-reads only, no halo
+            # writes).  ``hbm_bytes_read`` / ``read_amplification`` are
+            # the trajectory columns.
+            "hbm_model": {
+                "presliced": hbm_read_model(side, side, 1, tile, itemsize,
+                                            presliced=True),
+                "dma": hbm_read_model(side, side, 1, tile, itemsize,
+                                      presliced=False),
+            },
         }
         # Warm every variant (compile + bitwise-assert), then time them
         # INTERLEAVED round-robin with a best-of estimator: scheduler load
@@ -327,6 +354,37 @@ def run_frames(n_apps: int, sizes, reps: int) -> dict:
         )
         entry["async_vs_sync"] = (
             entry["async_tiled"]["e2e_apps_per_s"]
+            / entry["sync_tiled"]["e2e_apps_per_s"]
+        )
+
+        # -- pallas tiled: the in-kernel DMA megakernel at this size ------
+        # Bitwise-asserted, then timed on its own (fewer reps, not
+        # interleaved): interpret mode off-TPU is the expected-slower
+        # path; on a TPU runner this IS the compiled fused-e2e ratio.
+        pallas_fleet = PixieFleet(default_grid=grid, batch_tile=n_apps,
+                                  backend="pallas", tile_rows=tile)
+
+        def pallas_e2e():
+            return jax.block_until_ready(pallas_fleet.run_many(requests))
+
+        for a, b in zip(ref, pallas_e2e()):
+            np.testing.assert_array_equal(a, np.asarray(b))
+        t_pallas = float("inf")
+        for _ in range(max(2, reps_side // 8)):
+            t0 = time.perf_counter()
+            pallas_e2e()
+            t_pallas = min(t_pallas, time.perf_counter() - t0)
+        assert pallas_fleet.stats.overlay_builds == 1, \
+            pallas_fleet.stats.as_dict()
+        entry["pallas_tiled"] = {
+            "e2e_s_per_round": t_pallas,
+            "e2e_apps_per_s": n_apps / t_pallas,
+            "e2e_mpixels_per_s": n_apps * side * side / t_pallas / 1e6,
+            "interpret_mode": default_interpret(),
+            "hbm_bytes_read": entry["hbm_model"]["dma"]["hbm_bytes_read"],
+        }
+        entry["pallas_vs_xla_tiled"] = (
+            entry["pallas_tiled"]["e2e_apps_per_s"]
             / entry["sync_tiled"]["e2e_apps_per_s"]
         )
         frames[str(side)] = entry
@@ -385,10 +443,16 @@ def main(argv=None) -> dict:
         print(f"  {side:>4}^2 px    "
               f"untiled {e['sync_untiled']['e2e_apps_per_s']:8.1f}  "
               f"tiled(r{e['tile_rows']}) {e['sync_tiled']['e2e_apps_per_s']:8.1f}  "
-              f"async {e['async_tiled']['e2e_apps_per_s']:8.1f} apps/s  "
+              f"async {e['async_tiled']['e2e_apps_per_s']:8.1f}  "
+              f"pallas {e['pallas_tiled']['e2e_apps_per_s']:8.1f} apps/s  "
               f"(x{e['tiled_vs_untiled']:.2f} tiled, "
               f"x{e['async_vs_sync']:.2f} async, "
-              f"auto tile {e['auto_tile_rows']})")
+              f"x{e['pallas_vs_xla_tiled']:.2f} pallas, "
+              f"auto tile {e['auto_tile_rows']}, "
+              f"hbm reads x{e['hbm_model']['dma']['read_amplification']:.2f} "
+              f"dma vs "
+              f"x{e['hbm_model']['presliced']['read_amplification']:.2f} "
+              f"presliced)")
 
     print("BENCH " + json.dumps(result))
     if a.out:
@@ -416,6 +480,27 @@ def main(argv=None) -> dict:
             fails.append(
                 f"tiled fused e2e x{frames['32']['tiled_vs_untiled']:.2f} "
                 f"of untiled at 32^2 < floor x0.8"
+            )
+        for side, e in frames.items():
+            # The DMA pipeline's whole point, as a model invariant: fewer
+            # modelled HBM bytes read than the pre-sliced slab layout at
+            # every measured (side, tile), and ~1x frame-size reads.
+            dma = e["hbm_model"]["dma"]
+            pre = e["hbm_model"]["presliced"]
+            if not (dma["hbm_bytes_read"] < pre["hbm_bytes_read"]
+                    and dma["hbm_halo_bytes_written"] == 0
+                    and dma["read_amplification"] < 1.5):
+                fails.append(
+                    f"hbm model at {side}^2: dma reads "
+                    f"x{dma['read_amplification']:.2f} not < presliced "
+                    f"x{pre['read_amplification']:.2f} (or halo writes "
+                    f"nonzero)"
+                )
+        if "32" in frames and frames["32"]["pallas_vs_xla_tiled"] < PALLAS_FLOOR_VS_XLA:
+            fails.append(
+                f"pallas tiled fused e2e x"
+                f"{frames['32']['pallas_vs_xla_tiled']:.3f} of xla tiled at "
+                f"32^2 < floor x{PALLAS_FLOOR_VS_XLA}"
             )
         if "256" in frames:
             if frames["256"]["async_vs_sync"] < 1.0:

@@ -79,7 +79,11 @@ class OverlayPlan:
       halo) or ``tiling.TILE_AUTO`` (the VMEM budget heuristic picks at
       trace time from the static frame shape).  Fused plans only --
       the unfused path has no tap bank and already tiles its flat pixel
-      axis.  All values are bitwise-identical;
+      axis.  All values are bitwise-identical.  On ``backend="pallas"``
+      the tiling lowers to the in-kernel double-buffered HBM->VMEM DMA
+      pipeline (kernels/vcgra/vcgra_kernel.py) -- a kernel-internal
+      lowering choice, NOT a plan axis: keys and cache entries are
+      unchanged from the pre-DMA layout;
     * ``ingest``   "sync" (pack, dispatch, materialize in order) or
       "async" (the dispatch's frame/channel operand is *donated*, so the
       fleet's double-buffered pipeline can ship pooled canvases with

@@ -12,17 +12,26 @@ already-valid config whose outputs are discarded.
 
 from __future__ import annotations
 
-from typing import List, Sequence, Union
+import math
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
 #: Default on-chip working-set budget for the pixel-tiled fused executors
-#: (bytes).  Half of a TPU core's ~16 MiB VMEM is left for double-buffered
-#: HBM->VMEM pipelining and the settings banks; the resident slab working
-#: set (tap bank + memory-VC channels + widest PE level, all
-#: ``[_, tile_rows + 2*radius, W]``-shaped) must fit in the rest.
+#: (bytes).  Half of a TPU core's ~16 MiB VMEM; the resident working set
+#: -- BOTH in-flight DMA slabs of the double buffer plus the ``(T+1)``-row
+#: tap bank, the memory-VC channels and the widest PE level, all
+#: ``[_, tile_rows(+2*radius), W]``-shaped -- must fit in it (the other
+#: half is headroom for the settings banks and compiler temporaries).
 DEFAULT_VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+#: Lane width of the TPU vector unit: the compiled megakernel needs its
+#: flattened pixel block (``tile_rows * W``) to be a multiple of this.
+#: Re-exported by ``kernels/vcgra/vcgra_kernel.py``; defined here so the
+#: tile-height resolver (:func:`resolve_tile_rows`) and the kernel agree
+#: on one constant.
+LANE = 128
 
 #: Sentinel ``OverlayPlan.tile_rows`` value: resolve the row-tile height
 #: from the VMEM budget heuristic at trace time (shapes are static under
@@ -64,17 +73,33 @@ def slab_rows_per_budget(
     The fused megakernel's resident working set per kernel instance is
     the tap bank (``(2r+1)^2 + 1`` producer rows), the memory-VC channel
     matrix (``num_inputs`` rows) and the widest PE level
-    (``max_level_width`` rows), each ``tile_rows * W`` elements, plus the
-    ``(tile_rows + 2*radius) * W`` input slab itself.  Solving
-    ``bytes_per_output_row * tile_rows + halo_bytes <= budget`` for
-    ``tile_rows`` (the constant ``2*radius*W`` slab halo comes off the
-    budget up front, so the pick never exceeds it) gives the heuristic.
+    (``max_level_width`` rows), each ``tile_rows * W`` elements, plus
+    BOTH ``(tile_rows + 2*radius) * W`` slabs of the in-kernel DMA double
+    buffer (tile t computes out of one while tile t+1 streams HBM->VMEM
+    into the other).  Solving ``bytes_per_output_row * tile_rows +
+    halo_bytes <= budget`` for ``tile_rows`` (the constant ``2 * 2*radius
+    * W`` double-buffer halo comes off the budget up front, so the pick
+    never exceeds it) gives the heuristic.
     """
     taps = (2 * radius + 1) ** 2 + 1
     width = max(W, 1)
-    per_row = (taps + num_inputs + max_level_width + 1) * width * itemsize
-    budget = int(budget_bytes) - 2 * radius * width * itemsize
+    per_row = (taps + num_inputs + max_level_width + 2) * width * itemsize
+    budget = int(budget_bytes) - 2 * (2 * radius) * width * itemsize
     return max(1, budget // per_row)
+
+
+def lane_aligned_tile_rows(tile_rows: int, W: int, lane: int = LANE) -> int:
+    """Round a tile height DOWN to the largest multiple of
+    ``lane / gcd(W, lane)`` that is <= ``tile_rows`` (and at least that
+    granule), which guarantees ``(tile_rows * W) % lane == 0`` -- the
+    pixel-block layout constraint of the compiled megakernel -- while
+    only ever shrinking the working set.  THE one definition of the
+    rounding, shared by the AUTO-tile heuristic (:func:`resolve_tile_rows`
+    with ``lane_align=``) and any caller that wants to pre-check an
+    explicit tile height."""
+    g = lane // math.gcd(max(int(W), 1), lane)
+    tr = int(tile_rows)
+    return max(g, tr - tr % g)
 
 
 def resolve_tile_rows(
@@ -84,14 +109,24 @@ def resolve_tile_rows(
     radius: int,
     grid,
     budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES,
+    lane_align: Optional[int] = None,
 ) -> int:
     """Resolve a plan's ``tile_rows`` axis against one frame shape.
 
     ``None`` means untiled (one slab = the whole frame); :data:`TILE_AUTO`
     asks the VMEM budget heuristic (:func:`slab_rows_per_budget`); an int
-    is taken verbatim.  The result is always clamped to ``[1, H]`` --
+    is taken verbatim.  The result is clamped to ``[1, H]`` --
     ``tile_rows >= H`` degenerates to the untiled single-slab layout, so
     small frames pay no tiling machinery under the auto default.
+
+    ``lane_align`` (the compiled megakernel passes its LANE width; the
+    XLA twin and interpret mode pass None -- no layout constraint there)
+    rounds an AUTO pick that actually tiles down to a lane-aligned tile
+    height via :func:`lane_aligned_tile_rows`, so the heuristic, the XLA
+    tiled twin and the compiled DMA path all resolve through this ONE
+    definition and the kernel's loud lane-align assert fires with the
+    already-rounded value.  Explicit int tile heights are the caller's
+    choice and are never silently rewritten.
     """
     if tile_rows is None:
         return max(int(H), 1)
@@ -103,7 +138,10 @@ def resolve_tile_rows(
             itemsize=jnp.dtype(grid.dtype).itemsize,
             budget_bytes=budget_bytes,
         )
-        return max(1, min(picked, int(H)))
+        picked = max(1, min(picked, int(H)))
+        if lane_align and picked < int(H):
+            picked = lane_aligned_tile_rows(picked, W, lane_align)
+        return picked
     return max(1, min(int(tile_rows), int(H)))
 
 
@@ -140,6 +178,50 @@ def halo_row_slabs(images: jnp.ndarray, tile_rows: int, radius: int) -> jnp.ndar
         ],
         axis=1,
     )
+
+
+def hbm_read_model(
+    H: int, W: int, radius: int, tile_rows: Union[int, None], itemsize: int,
+    *, presliced: bool,
+) -> Dict[str, float]:
+    """Modelled per-frame HBM traffic of the two row-tiled fused
+    lowerings, for the bench JSON's ``hbm_bytes_read`` column.
+
+    ``presliced`` (the old Pallas lowering, still the XLA twin's layout):
+    the host side of the call materializes overlapping halo slabs
+    ``[T, tile_rows + 2r, W]`` in HBM -- the frame is read once to build
+    them, the duplicated tensor is written, and the kernel then streams
+    the whole duplicated tensor back in.  ``bytes_read`` is therefore
+    ``frame + slabs = (2 + 2r*T/H) x`` the frame size, plus a
+    ``(1 + 2r*T/H) x`` write that the un-duplicated path never pays.
+
+    In-kernel DMA (``presliced=False``): the kernel DMAs overlapping
+    windows straight out of the ONE zero-row-padded frame -- each frame
+    row crosses HBM->VMEM once, halo rows are re-read only at the
+    ``T - 1`` tile seams (``2r`` rows each), and nothing halo-shaped is
+    ever written to HBM.  ``read_amplification`` is bytes_read over the
+    raw frame size: ``~1x`` for real tile heights vs the pre-sliced
+    path's ``>= 2x`` (the ``1 + 2r/tile_rows`` duplication, paid twice:
+    once written, once read).
+    """
+    frame = int(H) * int(W) * int(itemsize)
+    tr = max(int(H), 1) if tile_rows is None else min(int(tile_rows), int(H))
+    T = num_row_tiles(H, tr)
+    slab_bytes = T * (tr + 2 * int(radius)) * int(W) * int(itemsize)
+    if presliced:
+        read = frame + slab_bytes          # frame (to slice) + slab stream
+        written = slab_bytes               # the duplicated halo tensor
+    else:
+        read = slab_bytes                  # seam halos only; no duplication
+        written = 0
+    return {
+        "frame_bytes": frame,
+        "tile_rows": tr,
+        "n_tiles": T,
+        "hbm_bytes_read": read,
+        "hbm_halo_bytes_written": written,
+        "read_amplification": read / frame if frame else 0.0,
+    }
 
 
 def round_up(n: int, tile: int) -> int:

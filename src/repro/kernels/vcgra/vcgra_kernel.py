@@ -27,7 +27,6 @@ unrolled inside the kernel: VMEM working set is
 from __future__ import annotations
 
 import functools
-import math
 from typing import Optional, Tuple
 
 import jax
@@ -41,14 +40,11 @@ from repro.core.grid import GridSpec
 from repro.core.ingest import tap_offsets
 from repro.core.ops import Op
 from repro.core.specialize import _live_slots
-from repro.core.tiling import (
-    TILE_AUTO,
-    halo_row_slabs,
-    num_row_tiles,
-    resolve_tile_rows,
-)
 
-LANE = 128
+# LANE is defined in core/tiling.py (the tile-height resolver and the
+# kernel must agree on one constant); re-exported here, its historical
+# home, for the callers that import it from the kernel package.
+from repro.core.tiling import LANE, num_row_tiles, resolve_tile_rows  # noqa: F401
 
 
 def default_interpret() -> bool:
@@ -266,30 +262,71 @@ def vcgra_batched(
 
 
 def _fused_batched_body(
-    grid: GridSpec, radius: int,
-    tap_sel_ref, op_ref, sel_ref, outsel_ref, const_ref, slab_ref, o_ref,
+    grid: GridSpec, radius: int, tile_rows: int,
+    tap_sel_ref, op_ref, sel_ref, outsel_ref, const_ref, frames_ref, o_ref,
+    slabs_ref, dma_sems_ref,
 ):
     """Fused-ingest megakernel body: one row-haloed slab -> outputs, per
-    (app, row-tile) grid step.
+    (app, row-tile) grid step, with the slab streamed HBM->VMEM by an
+    in-kernel double-buffered DMA.
 
-    The whole Pixie data path runs inside the kernel instance: the slab
-    (``[tile_rows + 2*radius, W]``; halo rows are real neighbours
-    mid-frame, zeros at the frame border -- pre-sliced on the host side of
-    the pallas_call) is column-padded and sliced into the tap bank
-    (line-buffer formation; offsets are trace-time constants), each
-    memory-VC channel *selects* its producer from the bank via the SMEM
-    tap_sel row (ingest plans are runtime settings, like VC muxes), then
-    the conventional PE pipeline executes on the channels -- all without
-    the slab ever leaving VMEM.  The untiled layout is simply the single
-    slab covering the whole frame.
+    ``frames_ref`` is the whole zero-row-padded frame stack
+    ``[N, T*tile_rows + 2r, W]`` left in HBM (``memory_space=ANY`` -- the
+    block pipeline never copies it); each grid step DMAs its own
+    ``[tile_rows + 2r, W]`` halo window straight out of the un-duplicated
+    frame into one of two VMEM slab buffers (``slabs_ref``) and *starts
+    the next step's window into the other buffer before computing*, so
+    tile t+1 streams in while tile t's PE pipeline executes.  The buffer
+    slot rotates on the LINEARIZED step index ``i*T + t`` (rotating on the
+    tile index alone desynchronizes producer and consumer at app
+    boundaries whenever T is odd).  Halo rows are re-read from HBM only at
+    tile seams (``2r`` rows per interior seam) -- never duplicated into an
+    HBM-resident slab tensor like the old host-side pre-slice.
+
+    The rest is the whole Pixie data path inside the kernel instance: the
+    slab is column-padded and sliced into the tap bank (line-buffer
+    formation; offsets are trace-time constants), each memory-VC channel
+    *selects* its producer from the bank via the SMEM tap_sel row (ingest
+    plans are runtime settings, like VC muxes), then the conventional PE
+    pipeline executes on the channels -- all without the slab ever leaving
+    VMEM.  The untiled layout is simply T == 1: one window covering the
+    whole padded frame, same body, no second buffer ever filled.
     """
     i = pl.program_id(0)
-    slab = slab_ref[0, 0]               # [tile_rows + 2r, W] haloed rows
-    S, W = slab.shape
-    dtype = slab.dtype
+    t = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+    step = i * n_tiles + t
+    slot = jax.lax.rem(step, 2)
     r = radius
-    tr = S - 2 * r                      # output rows of this tile
-    padded = jnp.pad(slab, ((0, 0), (r, r)))   # columns only; rows travel
+    tr = tile_rows
+
+    def slab_dma(slot, app, tile):
+        return pltpu.make_async_copy(
+            frames_ref.at[app, pl.ds(tile * tr, tr + 2 * r), :],
+            slabs_ref.at[slot],
+            dma_sems_ref.at[slot],
+        )
+
+    @pl.when(step == 0)
+    def _():
+        slab_dma(0, 0, 0).start()        # warm-up: first window, slot 0
+
+    # Start the NEXT step's window into the other buffer, then block on
+    # this step's own DMA: the prefetch is in flight across the wait and
+    # the whole PE pipeline below.  Next step's (app, tile) wraps the tile
+    # axis so the app boundary prefetches tile 0 of app i+1.
+    next_t = jax.lax.rem(t + 1, n_tiles)
+    next_i = i + jax.lax.div(t + 1, n_tiles)
+
+    @pl.when(step + 1 < pl.num_programs(0) * n_tiles)
+    def _():
+        slab_dma(1 - slot, next_i, next_t).start()
+
+    slab_dma(slot, i, t).wait()
+    slab = slabs_ref[slot]               # [tile_rows + 2r, W] haloed rows
+    W = slab.shape[1]
+    dtype = slab.dtype
+    padded = jnp.pad(slab, ((0, 0), (r, r)))   # columns only; rows came in
     taps = [
         padded[r + dj : r + dj + tr, r + di : r + di + W].reshape(tr * W)
         for dj, di in tap_offsets(radius)
@@ -300,9 +337,9 @@ def _fused_batched_body(
     consts = const_ref[0]                      # [C] in grid dtype
     chans = []
     for c in range(grid.num_inputs):
-        t = tap_sel_ref[i, c]
-        row = jax.lax.dynamic_index_in_dim(bank, t, 0, keepdims=False)
-        chans.append(jnp.where(t == zero_row, consts[c], row))
+        tap = tap_sel_ref[i, c]
+        row = jax.lax.dynamic_index_in_dim(bank, tap, 0, keepdims=False)
+        chans.append(jnp.where(tap == zero_row, consts[c], row))
     x = jnp.stack(chans, axis=0)               # [C, tile_rows*W] channels
     prev = _level_pipeline(grid, (i,), op_ref, sel_ref, x)
     o_ref[0] = _gather_outputs(grid, (i,), outsel_ref, prev, dtype)
@@ -329,15 +366,28 @@ def vcgra_fused_batched(
     for frames arriving in another dtype).  Returns [N, num_outputs, H*W]
     in the grid dtype.
 
-    Blocking: the pallas grid iterates (app, row-tile).  ``tile_rows``
-    (int, ``tiling.TILE_AUTO`` or None = whole frame) fixes the tile
-    height; each tile's input block is a ``[tile_rows + 2*radius, W]``
-    slab whose halo rows are pre-sliced from the zero-row-padded frame
-    (an HBM read amplification of ``2*radius/tile_rows``), so VMEM holds
-    only ``O((T+1 + max_level_width) * tile_rows * W)`` elements at a time
-    instead of the whole frame + tap bank.  ``tile_rows`` not dividing H
-    is padded with zero rows and sliced back -- bitwise-exact, the padding
-    is read only as the bottom halo.
+    Blocking: the pallas grid iterates (app, row-tile) over the ONE
+    zero-row-padded frame stack ``[N, T*tile_rows + 2r, W]``, which stays
+    in HBM (``memory_space=ANY``) -- no host-side halo slab tensor is ever
+    materialized.  ``tile_rows`` (int, ``tiling.TILE_AUTO`` or None =
+    whole frame) fixes the tile height; each grid step's
+    ``[tile_rows + 2*radius, W]`` halo window is streamed HBM->VMEM by the
+    kernel's own double-buffered ``make_async_copy`` pipeline (see
+    ``_fused_batched_body``): tile t+1's window is in flight while tile
+    t's PE pipeline executes, each frame row crosses HBM->VMEM once, and
+    halo rows are re-read only at tile seams.  VMEM holds
+    ``O((T+1 + max_level_width + 2) * tile_rows * W)`` elements at a time
+    (the +2 is both DMA slabs) instead of the whole frame + tap bank; the
+    budget heuristic (``tiling.slab_rows_per_budget``) accounts for
+    exactly this set.  ``tile_rows`` not dividing H is padded with zero
+    rows and sliced back -- bitwise-exact, the padding is read only as the
+    bottom halo.
+
+    (Why not ``pltpu.emit_pipeline``: its BlockSpec grids express
+    *disjoint* blocks -- index maps are multiplied by the block shape --
+    while halo windows overlap by ``2*radius`` rows; the manual
+    two-slab/two-semaphore rotation is the same schedule emit_pipeline
+    would build, with the overlapping source windows it cannot express.)
     """
     interpret = _resolve_interpret(interpret)
     ops_arr, sel_arr, out_sel = settings
@@ -345,48 +395,53 @@ def vcgra_fused_batched(
     images = jnp.asarray(images, grid.dtype)
     n_apps, H, W = images.shape
     r = radius
-    tr = resolve_tile_rows(tile_rows, H, W, r, grid)
-    if not interpret and tile_rows == TILE_AUTO and tr < H:
-        # The heuristic pick is an arbitrary int, but the compiled path
-        # needs a lane-aligned pixel block: round the AUTO tile down to a
-        # multiple of LANE/gcd(W, LANE), which guarantees (tr*W) % LANE
-        # == 0 while only shrinking the working set.  Explicit tile
-        # heights are the caller's choice and keep the loud assert below.
-        g = LANE // math.gcd(W, LANE)
-        tr = max(g, tr - tr % g)
+    # ONE tile-height definition for the heuristic, the XLA twin and this
+    # kernel (tiling.resolve_tile_rows); the compiled path asks it for a
+    # lane-aligned AUTO pick, so the loud assert below fires with the
+    # already-rounded value.
+    tr = resolve_tile_rows(tile_rows, H, W, r, grid,
+                           lane_align=None if interpret else LANE)
     n_tiles = num_row_tiles(H, tr)
     Hp = n_tiles * tr
-    # The compiled (real-TPU) path has never been profiled and needs a
-    # lane-aligned pixel block; fail with a clear message instead of an
-    # obscure Mosaic lowering error.  The fleet's pow-2 canvas bucketing
-    # (min side 16) satisfies this for the untiled layout and, with the
-    # rounding above, for AUTO tiling; explicit tiled callers must pick
-    # lane-friendly tile heights themselves.  Interpret mode (CPU/GPU CI)
-    # has no layout constraint.
+    # The compiled (real-TPU) path needs a lane-aligned pixel block; fail
+    # with a clear message instead of an obscure Mosaic lowering error.
+    # The fleet's pow-2 canvas bucketing (min side 16) satisfies this for
+    # the untiled layout and, with resolve_tile_rows' lane_align rounding,
+    # for AUTO tiling; explicit tiled callers must pick lane-friendly tile
+    # heights themselves.  Interpret mode (CPU/GPU CI) has no layout
+    # constraint.
     assert interpret or (tr * W) % LANE == 0, (
         f"compiled megakernel needs a lane-aligned pixel block: "
         f"tile_rows*W={tr}*{W}={tr * W} is not a multiple of {LANE}; pad "
         f"the canvas (the fleet's pow-2 bucketing does), pick another "
         f"tile_rows, or pass interpret=True"
     )
-    # Host side of the pallas_call: the shared halo math
-    # (tiling.halo_row_slabs -- one definition with the XLA tiled twin)
-    # pre-slices the overlapping [N, n_tiles, tile_rows + 2r, W] slabs
-    # the block pipeline streams HBM -> VMEM.
-    slabs = halo_row_slabs(images, tr, r)
-    body = functools.partial(_fused_batched_body, grid, radius)
+    # Host side of the pallas_call: ONLY the zero-row pad (radius rows of
+    # border top, radius + ragged-tile remainder bottom) -- the halo
+    # windows themselves are sliced by the in-kernel DMA, never
+    # materialized in HBM.
+    frames = jnp.pad(images, ((0, 0), (r, Hp - H + r), (0, 0)))
+    body = functools.partial(_fused_batched_body, grid, radius, tr)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,          # tap_sel, ops, sel, out_sel -> SMEM
         grid=(n_apps, n_tiles),
         in_specs=[
             pl.BlockSpec((1, grid.num_inputs), lambda i, t, *_: (i, 0)),
-            pl.BlockSpec((1, 1, tr + 2 * r, W), lambda i, t, *_: (i, t, 0, 0)),
+            # The padded frame stack stays in HBM; the kernel's DMA
+            # pipeline owns the HBM->VMEM movement.
+            pl.BlockSpec(memory_space=pltpu.ANY),
         ],
         out_specs=pl.BlockSpec(
             # Row-major flattening makes tile t's pixels contiguous: block
             # t of the pixel axis IS the tile's [tile_rows, W] rows.
             (1, grid.num_outputs, tr * W), lambda i, t, *_: (i, 0, t)
         ),
+        scratch_shapes=[
+            # The double buffer: two in-flight halo slabs + their DMA
+            # completion semaphores.
+            pltpu.VMEM((2, tr + 2 * r, W), images.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
     )
     y = pl.pallas_call(
         body,
@@ -395,5 +450,5 @@ def vcgra_fused_batched(
         ),
         grid_spec=grid_spec,
         interpret=interpret,
-    )(tap_sel, ops_arr, sel_arr, out_sel, const_vals, slabs)
+    )(tap_sel, ops_arr, sel_arr, out_sel, const_vals, frames)
     return y[:, :, : H * W] if Hp != H else y

@@ -68,6 +68,7 @@ from repro.core.ingest import IngestPlan, ReadinessProbe, check_ingest
 from repro.core.pixie import map_app
 from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan
 from repro.core.tiling import TILE_AUTO, check_tile_rows, pow2_bucket, round_up
+from repro.parallel.axes import APP_AXIS
 
 
 class LRUCache:
@@ -140,6 +141,13 @@ class FleetStats:
     # trust this number on every platform.
     ingest_overlap_s: float = 0.0
     canvas_pool_hits: int = 0    # frame canvases reused instead of allocated
+    # Per-device canvas reuse for sharded async fleets: the pool is keyed
+    # by mesh device, so each shard's ingest fills (and ships) its own
+    # host buffer instead of serializing through one whole-batch canvas.
+    # Keyed by str(device.id) -> hit count; empty for unsharded fleets.
+    canvas_pool_device_hits: Dict[str, int] = dataclasses.field(
+        default_factory=dict
+    )
     submitted: int = 0
     executed: int = 0
     dispatches: int = 0          # batched overlay launches
@@ -452,15 +460,23 @@ class PixieFleet:
         self._banks.put(bkey, stacked)
         return stacked
 
-    def _canvas(self, shape: Tuple[int, ...], dtype) -> _PooledCanvas:
+    def _canvas(self, shape: Tuple[int, ...], dtype,
+                device=None) -> _PooledCanvas:
         """A zeroed frame canvas from the reuse pool (no per-flush numpy
         allocation in steady state).  Pool depth 2 under async ingest --
         the double buffer: flush k+1 packs one buffer while flush k's
         device_put of the other may still be copying; any pending ship is
         blocked on here, at reuse time, when it is long complete (sync
         mode materializes outputs before the next flush, so depth 1 and
-        no pending ships)."""
-        key = (shape, np.dtype(dtype).str)
+        no pending ships).
+
+        ``device`` keys the pool per mesh device for sharded async fleets
+        (:meth:`_ship_sharded_frames`): each device's shard rotates its own
+        depth-2 buffer pair, so one shard's still-copying ship never blocks
+        another shard's fill.  Per-device reuse is counted separately in
+        ``stats.canvas_pool_device_hits``."""
+        key = (shape, np.dtype(dtype).str,
+               None if device is None else device.id)
         pool = self._canvas_pool.get(key)
         if pool is None:
             pool = []
@@ -473,6 +489,11 @@ class PixieFleet:
         entry = pool.pop(0)
         pool.append(entry)
         self.stats.canvas_pool_hits += 1
+        if device is not None:
+            dkey = str(device.id)
+            self.stats.canvas_pool_device_hits[dkey] = (
+                self.stats.canvas_pool_device_hits.get(dkey, 0) + 1
+            )
         if entry.pending is not None:
             try:
                 jax.block_until_ready(entry.pending)
@@ -484,6 +505,47 @@ class PixieFleet:
             entry.pending = None
         entry.buf.fill(0)
         return entry
+
+    def _ship_sharded_frames(self, mesh, n_tile: int, Hb: int, Wb: int,
+                             dtype, items) -> jnp.ndarray:
+        """Per-device canvas embed + ship for sharded async fused
+        dispatches: each mesh device gets its OWN pooled ``[n_tile/k, Hb,
+        Wb]`` host buffer (keyed by device in :meth:`_canvas`), its shard
+        of the tenant frames is embedded there, and the shards are shipped
+        independently with ``jax.device_put`` -- so per-shard ingest
+        overlaps across devices instead of serializing through one
+        whole-batch canvas whose single pending transfer gates every
+        shard's next fill.  The shards are assembled into ONE app-sharded
+        global array (``make_array_from_single_device_arrays`` over the
+        plan's mesh, spec ``P(APP_AXIS)`` -- exactly the layout the
+        shard_map executable expects, so jit inserts no resharding copy).
+        Bitwise-identical to the single-canvas path.
+
+        CPU devices ship a private copy (``jnp.array(copy=True)``) for the
+        same reason :meth:`_dispatch_fused`'s unsharded path does: a
+        zero-copy aliased device_put would let the pooled buffer's next
+        ``fill(0)`` race still-unforced lazy outputs.  Real accelerators
+        copy host->HBM by construction and skip the extra hop."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        devs = list(mesh.devices.flat)
+        shard_n = n_tile // len(devs)
+        entries = [self._canvas((shard_n, Hb, Wb), dtype, device=d)
+                   for d in devs]
+        for i, (_, p) in enumerate(items):
+            H, W = p.hw
+            entries[i // shard_n].buf[i % shard_n, :H, :W] = p.payload
+        shards = []
+        for e, d in zip(entries, devs):
+            if d.platform == "cpu":
+                shard = jax.device_put(jnp.array(e.buf, copy=True), d)
+            else:
+                shard = jax.device_put(e.buf, d)
+            e.pending = shard
+            shards.append(shard)
+        return jax.make_array_from_single_device_arrays(
+            (n_tile, Hb, Wb), NamedSharding(mesh, PartitionSpec(APP_AXIS)),
+            shards,
+        )
 
     def _fused_unpack(self, hws: Tuple[Tuple[int, int], ...], Hb: int, Wb: int):
         """Jit-once group unpack for async fused dispatches:
@@ -601,11 +663,6 @@ class PixieFleet:
         n_tile = round_up(n, self._app_tile)
         Hb = pow2_bucket(max(p.hw[0] for _, p in items), self.min_image_side)
         Wb = pow2_bucket(max(p.hw[1] for _, p in items), self.min_image_side)
-        entry = self._canvas((n_tile, Hb, Wb), grid.dtype)
-        canvas = entry.buf
-        for i, (_, p) in enumerate(items):
-            H, W = p.hw
-            canvas[i, :H, :W] = p.payload
         configs = [p.cfg for _, p in items]
         # Tile padding on the app axis: replay config[0] on a zero frame.
         configs += [configs[0]] * (n_tile - n)
@@ -613,16 +670,30 @@ class PixieFleet:
         self.stats.partial_tile_dispatches += 1 if n < n_tile else 0
 
         stacked, ingests = self._stacked_bank(grid, configs, fused=True)
-        if self.ingest == "async":
+        if self.ingest == "async" and fn.mesh is not None:
+            # Sharded async: per-device pooled canvases, shipped shard by
+            # shard and assembled app-sharded (see _ship_sharded_frames).
+            frames = self._ship_sharded_frames(
+                fn.mesh, n_tile, Hb, Wb, grid.dtype, items
+            )
+        elif self.ingest == "async":
+            entry = self._canvas((n_tile, Hb, Wb), grid.dtype)
+            for i, (_, p) in enumerate(items):
+                H, W = p.hw
+                entry.buf[i, :H, :W] = p.payload
             # copy=True by API contract (plain device_put MAY zero-copy
             # aligned numpy on CPU in some jax versions, which would let
             # the pooled buffer's next fill(0) race still-unforced lazy
             # outputs); the pending record defers the transfer wait to
             # the buffer's reuse two flushes later.
-            frames = jnp.array(canvas, copy=True)
+            frames = jnp.array(entry.buf, copy=True)
             entry.pending = frames
         else:
-            frames = jnp.asarray(canvas)
+            entry = self._canvas((n_tile, Hb, Wb), grid.dtype)
+            for i, (_, p) in enumerate(items):
+                H, W = p.hw
+                entry.buf[i, :H, :W] = p.payload
+            frames = jnp.asarray(entry.buf)
         # The canvas embed + bank build + ship above are host-side pack
         # work; only the overlay execution below counts as dispatch.
         self._note_overlap(t0)

@@ -30,9 +30,13 @@ Scheduling model:
     linger         the oldest pending request has waited max_linger_s with
                    no new arrivals -- deadline-less traffic must not starve
 
-  ``est_flush_s`` is an EWMA of observed flush durations (seeded
-  pessimistically so the first post-compile flushes do not teach the
-  scheduler that flushes are free).
+  The flush-duration estimate is a per-(grid, frame-bucket) EWMA of
+  observed flush wall times (seeded pessimistically so the first
+  post-compile flushes do not teach the scheduler that flushes are
+  free).  Keying by the fleet's own canvas bucket means a 256^2 tenant's
+  slow flushes never inflate deadline urgency for 32^2 traffic sharing
+  the server -- each (grid, bucket) population plans with its own recent
+  reality, and an unseen population starts from the pessimistic seed.
 * The batch is chosen by (priority desc, arrival order) and capped at
   ``target_batch``; the remainder stays pending for the next trigger --
   continuous batching, not drain-everything.
@@ -59,6 +63,7 @@ import numpy as np
 from repro.core import applications as app_lib
 from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
+from repro.core.tiling import pow2_bucket
 from repro.runtime.fleet import FleetRequest, PixieFleet
 from repro.serve.fleet_frontend import build_fleet
 from repro.serve.service import (
@@ -127,11 +132,16 @@ class StreamingFrontend(ImageService):
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.deadline_margin_s = float(deadline_margin_s)
         self.max_linger_s = float(max_linger_s)
-        # EWMA of observed flush wall times, used by the deadline trigger
-        # to decide how late a launch can start and still meet the SLO.
-        # Seeded pessimistically: until real flushes are observed the
-        # scheduler assumes they are slow and launches early.
-        self._est_flush_s = float(est_flush_s)
+        # Per-(grid, frame-bucket) EWMAs of observed flush wall times,
+        # used by the deadline trigger to decide how late a launch can
+        # start and still meet the SLO.  Keyed by the fleet's own pow-2
+        # canvas bucket so big-frame tenants never inflate urgency for
+        # small-frame traffic; populations the server has not flushed yet
+        # fall back to the pessimistic seed (until real flushes are
+        # observed the scheduler assumes they are slow and launches
+        # early).
+        self._est_flush_seed = float(est_flush_s)
+        self._est_flush: Dict[tuple, float] = {}
         self.latency = LatencyStats()
         self._queue: "queue.Queue" = queue.Queue(maxsize=self.max_queue)
         self._seq = 0
@@ -265,8 +275,30 @@ class StreamingFrontend(ImageService):
 
     @property
     def est_flush_s(self) -> float:
-        """Current flush-duration estimate the deadline trigger uses."""
-        return self._est_flush_s
+        """Most pessimistic current flush-duration estimate across the
+        (grid, frame-bucket) populations the server has flushed (the
+        seed before any flush) -- the scalar the serving bench records;
+        the deadline trigger itself plans with each request's own
+        population estimate (:meth:`_estimate`)."""
+        return max(self._est_flush.values(), default=self._est_flush_seed)
+
+    def _flush_key(self, p: _PendingRequest) -> tuple:
+        """The EWMA population of one request: its grid and the padded
+        canvas bucket its frame lands in -- the SAME pow-2 bucketing the
+        fleet's dispatch uses, so requests that share a compiled
+        executable shape (and therefore a flush-duration profile) share
+        an estimate."""
+        grid = p.grid or self.fleet.default_grid
+        H, W = p.image.shape
+        return (
+            grid,
+            pow2_bucket(H, self.fleet.min_image_side),
+            pow2_bucket(W, self.fleet.min_image_side),
+        )
+
+    def _estimate(self, p: _PendingRequest) -> float:
+        """Flush-duration estimate for one request's population."""
+        return self._est_flush.get(self._flush_key(p), self._est_flush_seed)
 
     # -- worker -------------------------------------------------------------
 
@@ -315,7 +347,7 @@ class StreamingFrontend(ImageService):
             default=now,
         ) - now
         slack = min(
-            (p.deadline_at - self._est_flush_s - self.deadline_margin_s
+            (p.deadline_at - self._estimate(p) - self.deadline_margin_s
              for p in pending if p.deadline_at is not None),
             default=float("inf"),
         ) - now
@@ -324,10 +356,13 @@ class StreamingFrontend(ImageService):
     def _deadline_urgent(self, pending: List[_PendingRequest], now: float) -> bool:
         """Would waiting any longer risk the most urgent pending SLO?
         (The partial-tile trigger: launch when the estimated flush no
-        longer fits inside the tightest remaining deadline budget.)"""
-        budget = self._est_flush_s + self.deadline_margin_s
+        longer fits inside the tightest remaining deadline budget.)
+        Each request is judged against ITS population's estimate: a 32^2
+        request next to 256^2 traffic keeps its own cheap budget."""
         return any(
-            p.deadline_at is not None and p.deadline_at - now <= budget
+            p.deadline_at is not None
+            and p.deadline_at - now
+            <= self._estimate(p) + self.deadline_margin_s
             for p in pending
         )
 
@@ -371,8 +406,16 @@ class StreamingFrontend(ImageService):
             return
         flush_started = self.fleet.timings.get("flush_started", time.perf_counter())
         flush_s = self.fleet.timings.get("flush_s", 0.0)
-        # EWMA update: the deadline trigger plans with recent reality.
-        self._est_flush_s = 0.7 * self._est_flush_s + 0.3 * flush_s
+        # EWMA update, per population present in this flush: the deadline
+        # trigger plans with recent reality for the shapes it just served
+        # (a mixed flush credits its wall time to every population in it
+        # -- pessimistic for the small ones, and exactly why homogeneous
+        # batches keep their own key).
+        for key in {self._flush_key(p) for p in tickets.values()}:
+            self._est_flush[key] = (
+                0.7 * self._est_flush.get(key, self._est_flush_seed)
+                + 0.3 * flush_s
+            )
         t_done = time.perf_counter()
         for ticket, p in tickets.items():
             self.fleet.discard(ticket)

@@ -238,6 +238,58 @@ def test_streaming_close_drains_and_rejects(rng):
     svc.close(timeout=WAIT)                   # idempotent
 
 
+def test_per_bucket_flush_estimates_isolated(rng):
+    """PR 7 satellite: the deadline trigger's flush-duration EWMA is
+    keyed per (grid, frame-bucket) -- a slow big-frame population must
+    not inflate urgency for small-frame traffic, and vice versa."""
+    from repro.serve.streaming import _PendingRequest
+
+    svc = StreamingFrontend(fleet=PixieFleet(default_grid=sobel_grid()),
+                            est_flush_s=0.05, autostart=False)
+
+    def pending(shape):
+        return _PendingRequest(
+            seq=0, name="sobel_x", work="sobel_x",
+            image=np.zeros(shape, np.int32), grid=None, priority=0,
+            t_arrival=0.0, deadline_at=None, deadline_s=None,
+            handle=JobHandle(0, "sobel_x"),
+        )
+
+    small, big = pending((8, 8)), pending((256, 256))
+    # same grid, different pow-2 canvas buckets -> different populations
+    assert svc._flush_key(small) != svc._flush_key(big)
+    # frames sharing a bucket share an estimate (17 and 30 both pad to 32)
+    assert svc._flush_key(pending((17, 30))) == svc._flush_key(pending((30, 17)))
+    # before any flush, both fall back to the pessimistic seed
+    assert svc._estimate(small) == svc._estimate(big) == 0.05
+    # teach the big population it is slow: the small one is untouched
+    svc._est_flush[svc._flush_key(big)] = 0.5
+    assert svc._estimate(big) == 0.5
+    assert svc._estimate(small) == 0.05
+    # the bench-facing scalar reports the most pessimistic population
+    assert svc.est_flush_s == 0.5
+    # urgency is judged per request: with 0.1 s to spare, the small
+    # request has slack (est 0.05) while the big one is already urgent
+    small.deadline_at = big.deadline_at = 0.1 + svc.deadline_margin_s
+    assert svc._deadline_urgent([big], now=0.0)
+    assert not svc._deadline_urgent([small], now=0.0)
+    svc.close(timeout=WAIT)
+
+
+def test_streaming_learns_estimates_per_bucket(rng):
+    """Live smoke: after serving one small-frame trace, the server has a
+    real EWMA entry for exactly that (grid, bucket) population."""
+    svc = StreamingFrontend(fleet=PixieFleet(default_grid=sobel_grid()))
+    img = rng.integers(0, 256, (8, 8)).astype(np.int32)
+    hs = [svc.submit(n, img) for n in MIX]
+    for h in hs:
+        h.result(timeout=WAIT)
+    svc.close(timeout=WAIT)
+    assert len(svc._est_flush) == 1
+    ((grid, Hb, Wb), est), = svc._est_flush.items()
+    assert (Hb, Wb) == (16, 16) and est > 0.0   # 8 pads to the 16 floor
+
+
 # -- streaming == synchronous, bitwise ----------------------------------------
 
 

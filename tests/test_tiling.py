@@ -111,11 +111,14 @@ def test_resolve_tile_rows_and_budget_heuristic():
     # ... 1080p-class frames do not: the heuristic actually tiles
     auto_1080 = resolve_tile_rows(TILE_AUTO, 1080, 1920, 1, GRID)
     assert 1 <= auto_1080 < 1080
-    # the slab working set the pick implies respects the budget
+    # the working set the pick implies respects the budget, INCLUDING both
+    # in-flight DMA slabs of the double buffer (+2 rows per output row plus
+    # the constant 2 * 2r * W halo rows)
     itemsize = jnp.dtype(GRID.dtype).itemsize
     taps = (2 * 1 + 1) ** 2 + 1
-    per_row = (taps + GRID.num_inputs + max(GRID.pes_per_level) + 1) * 1920 * itemsize
-    assert auto_1080 * per_row <= DEFAULT_VMEM_BUDGET_BYTES
+    per_row = (taps + GRID.num_inputs + max(GRID.pes_per_level) + 2) * 1920 * itemsize
+    halo = 2 * (2 * 1) * 1920 * itemsize
+    assert auto_1080 * per_row + halo <= DEFAULT_VMEM_BUDGET_BYTES
     # budget monotonicity + floor of one row
     assert slab_rows_per_budget(1 << 20, 2, num_inputs=64, max_level_width=32,
                                 itemsize=4) == 1
