@@ -16,7 +16,7 @@ import time
 
 import numpy as np
 
-from repro.core import sobel_grid
+from repro.core import MeshSpec, sobel_grid
 from repro.core import applications as apps
 from repro.runtime.fleet import PixieFleet
 from repro.serve import FleetFrontend, StreamingFrontend
@@ -25,7 +25,18 @@ from repro.serve import FleetFrontend, StreamingFrontend
 def main():
     print("=== Pixie fleet quickstart: multi-tenant overlay serving ===\n")
     rng = np.random.default_rng(0)
-    svc = FleetFrontend(fleet=PixieFleet(default_grid=sobel_grid()))
+    # Device placement is a structured MeshSpec: `app` shards tenants,
+    # `rows` shards each frame into pixel-row bands (halo-exchanged).
+    # Hosts with too few devices degrade to the bitwise single-device
+    # fallback and the stats say so -- the request below is safe anywhere.
+    fleet = PixieFleet(default_grid=sobel_grid(), mesh=MeshSpec(app=2))
+    stats = fleet.stats
+    print(f"mesh: requested {stats.mesh_requested[0]}x"
+          f"{stats.mesh_requested[1]}, granted {stats.mesh_granted[0]}x"
+          f"{stats.mesh_granted[1]}"
+          + (" (degraded: single-device fallback, bitwise identical)"
+             if stats.mesh_degraded else ""))
+    svc = FleetFrontend(fleet=fleet)
     print(f"service apps: {svc.available_apps()}")
 
     # A mixed request stream: 12 frames across 4 tenants, ragged sizes.

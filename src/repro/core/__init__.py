@@ -25,6 +25,7 @@ from repro.core.ingest import IngestError, IngestPlan, plan_for, tap_offsets
 from repro.core.ops import Op
 from repro.core.pixie import Pixie, map_app, sobel_pixie
 from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan, register_executor
+from repro.parallel.axes import MeshSpec
 from repro.core.place import Placement, PlacementError, level_demand, place
 from repro.core.route import Routing, RoutingError, route
 from repro.core.synthesis import SOBEL_SOURCE, synthesize
@@ -33,6 +34,7 @@ __all__ = [
     "DFG", "InRef", "NodeRef", "reference_eval",
     "GridSpec", "for_dfg", "paper_4x4", "rectangular", "sobel_grid",
     "IngestError", "IngestPlan", "plan_for", "tap_offsets",
+    "MeshSpec",
     "Op", "OverlayExecutable", "OverlayPlan", "compile_plan", "register_executor",
     "Pixie", "map_app", "sobel_pixie",
     "Placement", "PlacementError", "level_demand", "place",

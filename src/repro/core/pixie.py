@@ -15,6 +15,7 @@ benchmark (paper Sec. V-E: <1 s mapping vs ~1200 s FPGA compile).
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -30,6 +31,7 @@ from repro.core.grid import GridSpec
 from repro.core.place import place
 from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan
 from repro.core.route import route
+from repro.parallel.axes import MeshSpec
 
 
 def map_app(dfg: DFG, grid: GridSpec) -> VCGRAConfig:
@@ -49,13 +51,17 @@ class Pixie:
                          re-specializes (re-jits) but executes a leaner
                          datapath (paper's TLUT/TCON flow).
 
-    ``backend`` ("xla" | "pallas") and ``devices`` select the execution
-    backend and app-axis device sharding of every conventional-mode
-    dispatch -- the same plan axes the fleet exposes, so single-app users
-    can exercise the pallas megakernels (or a mesh) without constructing
-    a ``PixieFleet``.  Only conventional mode takes them (the
-    parameterized path bakes one app into one XLA executable by
-    construction).
+    ``backend`` ("xla" | "pallas") and ``mesh`` (a
+    :class:`~repro.parallel.axes.MeshSpec`) select the execution backend
+    and app-axis device sharding of every conventional-mode dispatch --
+    the same plan axes the fleet exposes, so single-app users can
+    exercise the pallas megakernels (or a mesh) without constructing a
+    ``PixieFleet``.  Only conventional mode takes them (the parameterized
+    path bakes one app into one XLA executable by construction), and only
+    the app axis: row sharding needs the fleet's frame-canvas dispatch
+    (``PixieFleet``), so ``rows > 1`` is rejected here.  The bare
+    device-count kwarg survives as a DeprecationWarning shim for
+    ``mesh=MeshSpec(app=k)``.
     """
 
     def __init__(
@@ -64,24 +70,46 @@ class Pixie:
         mode: str = "conventional",
         bake_consts: bool = False,
         backend: str = "xla",
+        mesh: Optional[MeshSpec] = None,
         devices: Optional[int] = None,
     ):
         if mode not in ("conventional", "parameterized"):
             raise ValueError(f"unknown mode {mode!r}")
         interpreter.check_backend(backend)
-        devices = 1 if devices is None else int(devices)
-        if devices < 1:
-            raise ValueError(f"devices must be >= 1, got {devices}")
-        if mode == "parameterized" and (backend != "xla" or devices != 1):
+        if devices is not None:
+            d = int(devices)
+            if d < 1:
+                raise ValueError(f"devices must be >= 1, got {devices}")
+            if mesh is not None:
+                raise ValueError(
+                    "pass mesh=MeshSpec(...) or the deprecated bare device "
+                    "count, not both"
+                )
+            warnings.warn(
+                "the bare device-count kwarg of Pixie is deprecated: pass "
+                f"mesh=MeshSpec(app={d}) instead",
+                DeprecationWarning, stacklevel=2,
+            )
+            mesh = MeshSpec(app=d)
+        mesh = mesh or MeshSpec()
+        if not isinstance(mesh, MeshSpec):
+            raise ValueError(f"mesh must be a MeshSpec, got {mesh!r}")
+        if mesh.rows > 1:
             raise ValueError(
-                "backend=/devices= apply to the conventional overlay plans "
+                "Pixie shards the app axis only; row sharding needs the "
+                "fleet's frame-canvas dispatch -- use PixieFleet with "
+                f"mesh=MeshSpec(app={mesh.app}, rows={mesh.rows})"
+            )
+        if mode == "parameterized" and (backend != "xla" or mesh != MeshSpec()):
+            raise ValueError(
+                "backend/mesh apply to the conventional overlay plans "
                 "only; the parameterized path specializes per app"
             )
         self.grid = grid
         self.mode = mode
         self.bake_consts = bake_consts
         self.backend = backend
-        self.devices = devices
+        self.mesh = mesh
         self.config: Optional[VCGRAConfig] = None
         self._overlay_fn: Optional[OverlayExecutable] = None
         self._batched_overlay_fn: Optional[OverlayExecutable] = None
@@ -91,13 +119,19 @@ class Pixie:
         self._spec_fn: Optional[Callable] = None
         self.timings: Dict[str, float] = {}
 
+    @property
+    def devices(self) -> int:
+        """App-axis mesh width (the reading side of the deprecated bare
+        device-count surface)."""
+        return self.mesh.app
+
     def _plan(self, *, batched: bool = False, fused: bool = False,
               radius: Optional[int] = None) -> OverlayPlan:
-        """This instance's corner of the plan matrix (devices only shard
+        """This instance's corner of the plan matrix (the mesh only shards
         batched dispatch -- single-app plans have no app axis)."""
         return OverlayPlan(
             grid=self.grid, batched=batched, fused=fused, radius=radius,
-            backend=self.backend, devices=self.devices if batched else 1,
+            backend=self.backend, mesh=self.mesh if batched else MeshSpec(),
         )
 
     # -- stage 1: overlay compile (the "1200 s" FPGA-compile analogue) ------
@@ -201,7 +235,7 @@ class Pixie:
         defaults to the largest batch in this call.  Ragged requests are
         zero-padded and the outputs sliced back, so results are bitwise
         identical to N sequential runs.  The dispatch runs on this
-        instance's ``backend`` and, when ``devices > 1``, shards the app
+        instance's ``backend`` and, when ``mesh.app > 1``, shards the app
         axis over a local device mesh (bitwise-equal either way).
 
         Returns one ``[num_outputs, batch_i]`` array per request, in order.

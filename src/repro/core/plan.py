@@ -22,15 +22,24 @@ plan -> compile -> execute pipeline:
   OverlayExecutable  the compiled artifact: callable with the plan-shaped
                    operands, carries its plan and (when sharded) mesh.
 
-Device placement: ``devices=k`` shards the app (N) axis of a *batched*
-plan across the first k local devices via shard_map
-(``parallel/axes.app_mesh`` / ``shard_apps``).  The app axis is
-embarrassingly parallel -- each tenant's flat-gather offsets are local to
-its own rows -- so the sharded result is bitwise identical to the
-single-device run; when the host has fewer devices than the plan asks
-for, compilation falls back to the single-device executable (same bits,
-same plan key).  N not divisible by k is padded inside the executable by
-replaying the last app and sliced back off.
+Device placement is a structured :class:`repro.parallel.axes.MeshSpec`:
+``MeshSpec(app=k)`` shards the app (N) axis of a *batched* plan across k
+local devices via shard_map (``parallel/axes.build_mesh`` /
+``shard_apps``) -- the app axis is embarrassingly parallel (each tenant's
+flat-gather offsets are local to its own rows), so the sharded result is
+bitwise identical to the single-device run.  ``MeshSpec(app=k, rows=m)``
+additionally shards fused frames *spatially* over a 2-D ``(app, rows)``
+mesh: each row shard owns a contiguous band of pixel rows and exchanges
+the radius-wide seam halo with its neighbours
+(``parallel/axes.shard_apps_rows``), then runs the unchanged per-shard
+executor -- still bitwise identical, because a haloed band reads exactly
+like a short frame whose border pixels are real neighbour rows.  When
+the host has fewer devices than the spec asks for, compilation falls
+back to the single-device executable (same bits, same plan key).  N not
+divisible by the app width -- and H not divisible into radius-deep row
+bands -- is padded inside the executable and sliced back off.  The
+deprecated bare device-count kwarg survives as a DeprecationWarning shim
+meaning ``MeshSpec(app=k)``.
 
 The legacy ``interpreter.make_*_overlay_fn`` factories survive as thin
 deprecated shims delegating here.
@@ -49,8 +58,10 @@ import jax.numpy as jnp
 from repro.core import interpreter
 from repro.core.grid import GridSpec
 from repro.core.ingest import INGEST_MODES, check_ingest  # noqa: F401
-from repro.core.tiling import TILE_AUTO, check_tile_rows
-from repro.parallel.axes import app_mesh, shard_apps
+from repro.core.tiling import TILE_AUTO, check_tile_rows, row_band
+from repro.parallel.axes import (
+    MeshSpec, build_mesh, shard_apps, shard_apps_rows,
+)
 
 #: Execution backends a plan may name (re-exported from the interpreter,
 #: which owns the validation shared with the fleet and the front-end).
@@ -71,8 +82,13 @@ class OverlayPlan:
       dispatch, tap bank of ``radius``) vs pre-packed channels;
     * ``backend``  "xla" (the hand-lowered interpreter, the bitwise
       oracle) or "pallas" (the VCGRA megakernels);
-    * ``devices``  how many local devices the app axis is sharded over
-      (1 = no mesh; >1 requires ``batched``);
+    * ``mesh``     the :class:`MeshSpec` device placement --
+      ``MeshSpec()`` is single-device, ``app`` > 1 shards the app axis
+      (requires ``batched``), ``rows`` > 1 row-bands fused frames with
+      seam halo exchange (requires ``batched`` AND ``fused``; unfused
+      channels carry no row structure to band).  The deprecated bare
+      device-count kwarg still constructs (with a DeprecationWarning) and
+      means ``MeshSpec(app=k)`` -- same plan, same key, same cache entry;
     * ``tile_rows``  pixel-axis row tiling of the fused executors: None
       (untiled -- the whole padded frame and tap bank are resident at
       once), an int (rows per tile, each tile carrying a radius-wide row
@@ -99,11 +115,31 @@ class OverlayPlan:
     fused: bool = False
     radius: Optional[int] = None     # tap-bank radius; fused plans only
     backend: str = "xla"
-    devices: int = 1
+    mesh: MeshSpec = MeshSpec()
     tile_rows: Union[int, str, None] = None  # fused plans only
     ingest: str = "sync"
+    #: Deprecated spelling of ``mesh=MeshSpec(app=k)`` (the pre-2-D bare
+    #: device-count kwarg).  Not a field: it maps onto ``mesh`` at
+    #: construction, so both spellings are ONE plan and ONE cache entry.
+    devices: dataclasses.InitVar[Optional[int]] = None
 
-    def __post_init__(self):
+    def __post_init__(self, devices):
+        if devices is not None:
+            d = int(devices)
+            if d < 1:
+                raise ValueError(f"devices must be >= 1, got {devices}")
+            if self.mesh != MeshSpec():
+                raise ValueError(
+                    "pass mesh=MeshSpec(...) or the deprecated bare device "
+                    "count, not both"
+                )
+            warnings.warn(
+                "the bare device-count kwarg of OverlayPlan is deprecated: "
+                f"pass mesh=MeshSpec(app={d}) instead",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+            object.__setattr__(self, "mesh", MeshSpec(app=d))
         interpreter.check_backend(self.backend)
         check_ingest(self.ingest)
         if self.fused:
@@ -128,26 +164,39 @@ class OverlayPlan:
                 )
             # Canonical key: explicit tile heights are ints.
             object.__setattr__(self, "tile_rows", check_tile_rows(self.tile_rows))
-        if self.devices < 1:
-            raise ValueError(f"devices must be >= 1, got {self.devices}")
-        if self.devices > 1 and not self.batched:
+        if not isinstance(self.mesh, MeshSpec):
             raise ValueError(
-                "devices > 1 shards the app (N) axis, which only batched "
-                "plans have; set batched=True or devices=1"
+                f"mesh must be a MeshSpec, got {self.mesh!r}"
+            )
+        if self.mesh.app > 1 and not self.batched:
+            raise ValueError(
+                "an app-axis mesh width > 1 shards the app (N) axis, which "
+                "only batched plans have; set batched=True or app=1"
+            )
+        if self.mesh.rows > 1 and not (self.batched and self.fused):
+            raise ValueError(
+                "a rows-axis mesh width > 1 band-shards the pixel rows of "
+                "fused frames, which only batched fused plans have (pre-"
+                "packed channels carry no row structure); set fused=True "
+                "or rows=1"
             )
 
     def key(self) -> str:
         """Compact human-readable identity, used by stats stamping and
         bench JSON (``FleetStats.dispatch_plans``).  The tile/ingest
-        segments appear only off their defaults so PR 4-era keys are
-        stable."""
+        segments appear only off their defaults, and the rows segment only
+        when the mesh is 2-D, so PR 4-era keys are stable --
+        ``MeshSpec(app=2)`` stamps the exact old ``dev2`` key and reuses
+        that executable population."""
         parts = [
             self.grid.name,
             "batched" if self.batched else "single",
             f"fused:r{self.radius}" if self.fused else "channels",
             self.backend,
-            f"dev{self.devices}",
+            f"dev{self.mesh.app}",
         ]
+        if self.mesh.rows > 1:
+            parts.append(f"rows{self.mesh.rows}")
         if self.tile_rows is not None:
             parts.append(f"tile:{self.tile_rows}")
         if self.ingest != "sync":
@@ -165,9 +214,10 @@ class OverlayExecutable:
       batched=True,  fused=False   fn(stacked_configs, xs)
       batched=True,  fused=True    fn(stacked_configs, stacked_ingests, images)
 
-    ``mesh`` is the device mesh the app axis is sharded over, or None for
-    the single-device path (including the fallback when the host could
-    not honor ``plan.devices``).
+    ``mesh`` is the device mesh the dispatch is sharded over (1-D for
+    app-only specs, 2-D for row-banded ones), or None for the
+    single-device path (including the fallback when the host could not
+    honor ``plan.mesh``).
     """
 
     def __init__(self, plan: OverlayPlan, fn: Callable, mesh=None):
@@ -277,15 +327,55 @@ def _with_app_padding(fn: Callable, devices: int) -> Callable:
     return padded
 
 
+def _with_mesh_padding(fn: Callable, spec: MeshSpec, radius: int) -> Callable:
+    """The 2-D twin of :func:`_with_app_padding` for row-banded fused
+    dispatch: pad the app axis to a multiple of ``spec.app`` (replaying
+    the last app) AND the frame's row axis to ``row_band(H, rows, radius)
+    * rows`` zero rows, then slice both back off the output.
+
+    The row floor at ``radius`` guarantees every shard's band is at least
+    as deep as the stencil reach, so the single-hop seam exchange of
+    ``halo_exchange_rows`` is always sufficient.  Zero pad rows are read
+    only as bottom-border zeros -- exactly ``form_tap_bank``'s border --
+    and their outputs are discarded, so padding is bitwise exact.  Shapes
+    are static under jit: both pad amounts are trace-time constants."""
+    app, rows = spec.app, spec.rows
+
+    def padded(configs, ingests, images):
+        n, H, W = images.shape
+        pad_n = (-n) % app
+        if pad_n:
+            configs, ingests, images = jax.tree_util.tree_map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.broadcast_to(a[-1:], (pad_n,) + a.shape[1:])],
+                    axis=0,
+                ),
+                (configs, ingests, images),
+            )
+        band = row_band(H, rows, radius)
+        pad_h = band * rows - H
+        if pad_h:
+            images = jnp.pad(images, ((0, 0), (0, pad_h), (0, 0)))
+        ys = fn(configs, ingests, images)
+        if pad_h:
+            ys = ys.reshape(ys.shape[0], ys.shape[1], band * rows, W)
+            ys = ys[:, :, :H, :].reshape(ys.shape[0], ys.shape[1], H * W)
+        return ys[:n] if pad_n else ys
+
+    return padded
+
+
 def compile_plan(plan: OverlayPlan) -> OverlayExecutable:
     """THE overlay compile entrypoint: plan -> jitted executable.
 
     Subsumes the former ``make_overlay_fn`` / ``make_batched_overlay_fn``
     / ``make_fused_overlay_fn`` / ``make_batched_fused_overlay_fn`` x
     backend matrix (those survive as deprecated shims delegating here).
-    Builds the backend's executor, wraps it in app-axis ``shard_map``
-    when ``plan.devices > 1`` and a mesh is available (single-device
-    bitwise fallback otherwise), and jits exactly once.
+    Builds the backend's executor, wraps it in ``shard_map`` over the
+    plan's mesh when ``plan.mesh`` asks for more than one device and the
+    host can grant it (single-device bitwise fallback otherwise -- 1-D
+    app sharding via ``shard_apps``, 2-D app x rows sharding with seam
+    halo exchange via ``shard_apps_rows``), and jits exactly once.
     """
     if plan.backend == "pallas":
         # Importing the kernel package registers its plan executors.
@@ -298,11 +388,15 @@ def compile_plan(plan: OverlayPlan) -> OverlayExecutable:
 
     num_args = 3 if plan.fused else 2
     mesh = None
-    if plan.devices > 1:
-        mesh = app_mesh(plan.devices)
-        if mesh is not None:
+    if plan.mesh.size > 1:
+        mesh = build_mesh(plan.mesh)
+        if mesh is not None and plan.mesh.rows > 1:
+            fn = _with_mesh_padding(
+                shard_apps_rows(fn, mesh, plan.radius), plan.mesh, plan.radius
+            )
+        elif mesh is not None:
             fn = _with_app_padding(
-                shard_apps(fn, mesh, num_args), plan.devices
+                shard_apps(fn, mesh, num_args), plan.mesh.app
             )
     # Async-ingest plans donate the trailing operand (the frames canvas /
     # channel stack): the double-buffered pipeline ships a fresh

@@ -224,6 +224,23 @@ def hbm_read_model(
     }
 
 
+def row_band(H: int, rows: int, radius: int = 0) -> int:
+    """Rows per shard band for 2-D ``(app, rows)`` mesh sharding:
+    ``ceil(H / rows)``, floored at ``radius`` (and 1).
+
+    The floor is what keeps the seam halo exchange single-hop: each row
+    shard's stencil taps reach at most ``radius`` rows past its band, and
+    :func:`repro.parallel.axes.halo_exchange_rows` fetches exactly the
+    neighbour's ``radius`` edge rows -- legal only while every band holds
+    at least ``radius`` rows, so a shard never needs pixels from two
+    shards away.  Frames are padded to ``row_band(...) * rows`` total
+    rows (``plan._with_mesh_padding``); the zero pad rows are read only
+    as bottom-border zeros and their outputs sliced off, so the padding
+    is exact in the same sense as :func:`halo_row_slabs`'s.
+    """
+    return max(-(-int(H) // int(rows)), int(radius), 1)
+
+
 def round_up(n: int, tile: int) -> int:
     """Smallest multiple of ``tile`` that is >= ``n``."""
     return ((n + tile - 1) // tile) * tile

@@ -1,9 +1,15 @@
-from repro.parallel.axes import app_mesh, constrain, shard_apps
+from repro.parallel.axes import (
+    APP_AXIS, ROW_AXIS, MeshSpec, app_mesh, build_mesh, constrain,
+    halo_exchange_rows, shard_apps, shard_apps_rows,
+)
 from repro.parallel.sharding import (
-    ShardingPlan, choose_attn_mode, data_axes, make_plan, model_size,
+    ShardingPlan, choose_attn_mode, data_axes, frame_sharding, make_plan,
+    model_size,
 )
 
 __all__ = [
-    "ShardingPlan", "app_mesh", "choose_attn_mode", "constrain", "data_axes",
-    "make_plan", "model_size", "shard_apps",
+    "APP_AXIS", "MeshSpec", "ROW_AXIS", "ShardingPlan", "app_mesh",
+    "build_mesh", "choose_attn_mode", "constrain", "data_axes",
+    "frame_sharding", "halo_exchange_rows", "make_plan", "model_size",
+    "shard_apps", "shard_apps_rows",
 ]

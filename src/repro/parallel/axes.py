@@ -6,20 +6,27 @@ context used by the dry-run and the real launcher); under no mesh (CPU
 unit tests) it is the identity, so model code can sprinkle constraints
 freely.
 
-The overlay dispatch pipeline (``core/plan.py``) uses the app-axis
-helpers below: ``app_mesh`` builds a 1-D mesh over local devices (None
-when the host cannot honor it -- the single-device bitwise fallback) and
-``shard_apps`` wraps a batched overlay executor in ``shard_map`` over the
-leading app (N) axis of every operand and output."""
+The overlay dispatch pipeline (``core/plan.py``) uses the mesh helpers
+below.  :class:`MeshSpec` is the structured device-placement axis of an
+``OverlayPlan``: ``app`` shards the leading app (N) axis -- embarrassingly
+parallel, PR 4 -- and ``rows`` shards the pixel-row axis of fused frames
+into contiguous bands whose radius-wide seam halos are exchanged with a
+``ppermute`` collective (:func:`halo_exchange_rows`), so one huge frame
+can span devices.  ``build_mesh`` realizes a spec against the local
+devices (None when the host cannot honor it -- the single-device bitwise
+fallback); ``shard_apps`` / ``shard_apps_rows`` wrap a batched overlay
+executor in ``shard_map`` over the 1-D / 2-D mesh."""
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def _ambient_mesh():
@@ -55,9 +62,85 @@ def constrain(x, *logical_axes: Optional[str]):
     return jax.lax.with_sharding_constraint(x, spec)
 
 
-# -- app-axis sharding for the overlay dispatch pipeline ----------------------
+# -- mesh sharding for the overlay dispatch pipeline ---------------------------
 
 APP_AXIS = "app"
+ROW_AXIS = "rows"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """The device-placement axis of an ``OverlayPlan``, as structured data.
+
+    ``app``  how many ways the leading app (N) axis of a batched dispatch
+             is sharded (the PR 4 axis, formerly a bare int kwarg);
+    ``rows`` how many contiguous pixel-row bands a fused frame is split
+             into across devices -- each shard owns ``band = H / rows``
+             output rows and receives its seam neighbours' ``radius`` edge
+             rows via :func:`halo_exchange_rows` before running the
+             *unchanged* per-shard executor (the PR 7 in-kernel DMA
+             pipeline composes per shard; the slab it sees is just a
+             shorter frame).
+
+    Frozen and hashable: the spec lives inside the plan, so it IS part of
+    THE cache key.  ``MeshSpec()`` is the single-device identity;
+    ``MeshSpec(app=k)`` is exactly the placement the deprecated
+    bare-int device kwarg used to mean, and produces the same plan key,
+    so pre-2-D executable populations are reused unchanged.
+    """
+
+    app: int = 1
+    rows: int = 1
+
+    def __post_init__(self):
+        for name in ("app", "rows"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(
+                    f"MeshSpec.{name} must be an int >= 1, got {v!r}"
+                )
+
+    @property
+    def size(self) -> int:
+        """Total devices the spec asks for (``app * rows``)."""
+        return self.app * self.rows
+
+    def app_only(self) -> "MeshSpec":
+        """The 1-D projection of this spec: same app-axis width, no row
+        sharding.  Unfused dispatches use it (pre-packed channels carry no
+        row structure to band-shard)."""
+        return MeshSpec(app=self.app)
+
+    def shape(self) -> Tuple[int, int]:
+        """``(app, rows)`` -- the stats/bench stamp of the spec."""
+        return (self.app, self.rows)
+
+    def __str__(self) -> str:
+        return f"{self.app}x{self.rows}"
+
+
+def build_mesh(spec: MeshSpec) -> Optional[Mesh]:
+    """Realize a :class:`MeshSpec` against the local devices.
+
+    ``MeshSpec(app=k)`` yields the same 1-D ``("app",)`` mesh as the
+    historical app-axis path; ``rows > 1`` yields a 2-D
+    ``("app", "rows")`` mesh where consecutive devices form one app
+    shard's row band (row neighbours adjacent, so seam ``ppermute``
+    traffic stays between nearby devices).  Returns ``None`` when the
+    spec is the single-device identity or the host has fewer local
+    devices than ``spec.size`` -- callers fall back to the single-device
+    path, which is bitwise identical; the fleet records the degradation
+    in ``FleetStats`` so dashboards see the parallelism actually granted.
+    """
+    if spec.size <= 1:
+        return None
+    avail = jax.local_devices()
+    if len(avail) < spec.size:
+        return None
+    devs = np.asarray(avail[: spec.size])
+    if spec.rows == 1:
+        return Mesh(devs, (APP_AXIS,))
+    return Mesh(devs.reshape(spec.app, spec.rows), (APP_AXIS, ROW_AXIS))
 
 
 def _shard_map_impl():
@@ -102,6 +185,94 @@ def shard_apps(fn: Callable, mesh: Mesh, num_args: int,
     return _shard_map_impl()(
         fn, mesh=mesh, in_specs=(spec,) * num_args, out_specs=spec
     )
+
+
+def halo_exchange_rows(slab: jnp.ndarray, radius: int, rows: int,
+                       axis: str = ROW_AXIS) -> jnp.ndarray:
+    """Exchange the radius-wide seam halos of a row-band shard.
+
+    Inside a ``shard_map`` over ``rows`` row shards, each shard holds a
+    contiguous band ``[n, band, W]`` of frame rows.  A stencil of tap
+    ``radius`` r needs r rows above and below the band: mid-frame those
+    are the *neighbour shard's* edge rows, at the frame border they are
+    zeros (``form_tap_bank``'s zero-pad semantics).  ``jax.lax.ppermute``
+    gives both for free -- each shard sends its bottom r rows down and its
+    top r rows up, and a shard named as nobody's destination receives
+    zeros -- so the concatenated ``[n, band + 2r, W]`` slab reads exactly
+    like a ``band + 2r``-row frame whose borders happen to be real
+    neighbour pixels.  Radius 0 is the identity: no collective is emitted
+    (jaxpr-checkable), so radius-0 row sharding costs no communication.
+    """
+    r = int(radius)
+    if r <= 0:
+        return slab
+    down = [(i, i + 1) for i in range(rows - 1)]   # my bottom rows -> next
+    up = [(i + 1, i) for i in range(rows - 1)]     # my top rows -> previous
+    above = jax.lax.ppermute(slab[:, -r:, :], axis, down)
+    below = jax.lax.ppermute(slab[:, :r, :], axis, up)
+    return jnp.concatenate([above, slab, below], axis=1)
+
+
+def shard_apps_rows(fn: Callable, mesh: Mesh, radius: int,
+                    app_axis: str = APP_AXIS,
+                    row_axis: str = ROW_AXIS) -> Callable:
+    """shard_map a batched *fused* overlay executor over a 2-D
+    ``(app, rows)`` mesh: apps shard the leading N axis (as
+    :func:`shard_apps`), rows shard the frame's pixel-row axis into
+    contiguous bands.
+
+    Each shard runs the UNCHANGED inner executor on its haloed band --
+    after :func:`halo_exchange_rows` the ``[n, band + 2r, W]`` slab is
+    indistinguishable from a short frame, so row tiling and the in-kernel
+    DMA pipeline lower per shard exactly as they would per frame -- and
+    keeps the middle ``band`` output rows: the discarded first/last r
+    rows are the ones whose taps read the slab's *synthetic* zero border
+    instead of rows two shards away, and every kept row's taps land on
+    real band/halo rows, which is why sharded output is bitwise equal to
+    the single-device run.  Callers pad H to ``band * rows`` with
+    ``band >= radius`` first (``plan._with_mesh_padding``) so one
+    single-hop exchange always suffices.
+
+    The flat pixel axis of the output ``[N, K, H * W]`` is row-major, so
+    each shard's ``band * W`` pixels are one contiguous block and the
+    out-spec ``P(app, None, rows)`` reassembles frames with no data
+    movement.
+    """
+    rows = mesh.shape[row_axis]
+    r = int(radius)
+
+    def banded(configs, ingests, slab):
+        haloed = halo_exchange_rows(slab, r, rows, axis=row_axis)
+        ys = fn(configs, ingests, haloed)
+        n, band, W = slab.shape
+        ys = ys.reshape(n, -1, band + 2 * r, W)[:, :, r:r + band, :]
+        return ys.reshape(n, ys.shape[1], band * W)
+
+    sharded = _shard_map_impl()(
+        banded, mesh=mesh,
+        in_specs=(P(app_axis), P(app_axis), P(app_axis, row_axis)),
+        out_specs=P(app_axis, None, row_axis),
+    )
+    replicated = NamedSharding(mesh, P())
+
+    def constrained(configs, ingests, images):
+        # Partitioner workaround (jax 0.4.37): resharding an operand that
+        # the compiler left device-sharded into a *partially replicated*
+        # 2-D-mesh in_spec (settings banks ride P(app), replicated over
+        # the rows axis) miscompiles into a sum over the unnamed axis --
+        # padded settings arrive doubled per row shard.  Pinning the
+        # banks fully replicated first makes the boundary reshard a plain
+        # local slice; the banks are KB-scale settings, so replication is
+        # the intended layout anyway (every row shard needs its app's
+        # whole config).  Frames are fully specified by their in_spec and
+        # unaffected.
+        configs, ingests = jax.tree_util.tree_map(
+            lambda a: jax.lax.with_sharding_constraint(a, replicated),
+            (configs, ingests),
+        )
+        return sharded(configs, ingests, images)
+
+    return constrained
 
 
 def constrain_time_mixer(x):

@@ -289,3 +289,20 @@ def make_plan(cfg: ArchConfig, mesh: Mesh, zero1: bool = True,
     return ShardingPlan(
         cfg, mesh, attn_mode or choose_attn_mode(cfg, mesh, kind), zero1=zero1
     )
+
+
+# -- overlay-mesh operand shardings (the VCGRA dispatch pipeline) --------------
+
+def frame_sharding(mesh: Mesh) -> NamedSharding:
+    """The :class:`NamedSharding` of a fused dispatch's frame operand on
+    an overlay mesh (``parallel.axes.build_mesh``): app-sharded on the 1-D
+    ``("app",)`` mesh, app x row-band sharded on the 2-D
+    ``("app", "rows")`` mesh.  The fleet's sharded async ship path
+    assembles per-device canvases into one global array under exactly this
+    sharding -- the layout the shard_map executable's in-spec names, so
+    jit inserts no boundary reshard copy."""
+    from repro.parallel.axes import APP_AXIS, ROW_AXIS
+
+    spec = (P(APP_AXIS, ROW_AXIS) if ROW_AXIS in mesh.axis_names
+            else P(APP_AXIS))
+    return NamedSharding(mesh, spec)

@@ -8,9 +8,12 @@ identically-shaped settings arrays, N *different* tenants can be stacked
 (``VCGRAConfig.stack``) and executed by one vmapped overlay executable in
 a single dispatch (a batched :class:`repro.core.plan.OverlayPlan`
 compiled once by ``compile_plan``) -- the serving-throughput analogue of
-resident multi-context bitstreams.  With ``devices=k`` the plan
-additionally shards the app axis of every dispatch over k local devices
-(bitwise-equal to the single-device run).
+resident multi-context bitstreams.  With a
+:class:`~repro.parallel.axes.MeshSpec` the plan additionally shards every
+dispatch over local devices: ``MeshSpec(app=k)`` splits the app axis k
+ways, ``MeshSpec(app=k, rows=m)`` also row-bands fused frames over a 2-D
+mesh with seam halo exchange (both bitwise-equal to the single-device
+run).
 
 Scheduling model:
 
@@ -51,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
+import warnings
 from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -67,8 +71,10 @@ from repro.core.grid import GridSpec
 from repro.core.ingest import IngestPlan, ReadinessProbe, check_ingest
 from repro.core.pixie import map_app
 from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan
-from repro.core.tiling import TILE_AUTO, check_tile_rows, pow2_bucket, round_up
-from repro.parallel.axes import APP_AXIS
+from repro.core.tiling import (
+    TILE_AUTO, check_tile_rows, pow2_bucket, round_up, row_band,
+)
+from repro.parallel.axes import APP_AXIS, ROW_AXIS, MeshSpec, build_mesh
 
 
 class LRUCache:
@@ -133,6 +139,16 @@ class FleetStats:
     backend: str = "xla"         # execution backend of every dispatch
     devices: int = 1             # app-axis mesh width of every dispatch
     ingest: str = "sync"         # ingest pipelining mode of every dispatch
+    # Mesh truthfulness: the (app, rows) shape the fleet was ASKED for vs
+    # the shape actually realized against the host's local devices.
+    # build_mesh degrades to the single-device bitwise fallback instead of
+    # erroring when the host is short, so without this stamp a serving
+    # dashboard would happily report a "16-way" fleet running on one chip;
+    # the bench JSON carries all three fields (see
+    # benchmarks/fleet_throughput.py).
+    mesh_requested: Tuple[int, int] = (1, 1)
+    mesh_granted: Tuple[int, int] = (1, 1)
+    mesh_degraded: bool = False
     # Host-side packing time that ran while a previous dispatch was still
     # executing on device (async ingest only): the double-buffer overlap
     # the sync path cannot have.  Completion is observed through
@@ -223,22 +239,43 @@ class PixieFleet:
         max_configs: int = 256,
         max_retained_results: int = 1024,
         backend: str = "xla",
-        devices: Optional[int] = None,
+        mesh: Optional[MeshSpec] = None,
         ingest: str = "sync",
         tile_rows: Union[int, str, None] = TILE_AUTO,
+        devices: Optional[int] = None,
     ):
         self.default_grid = default_grid or gridlib.sobel_grid()
         # Execution backend for every dispatch: "xla" (the hand-lowered
         # jnp interpreter, the bitwise oracle) or "pallas" (the batched
         # VCGRA megakernels, interpreted off-TPU / compiled on TPU).
         self.backend = interpreter.check_backend(backend)
-        # App-axis mesh width: devices=k shards the N axis of every
-        # batched dispatch over the first k local devices (bitwise-equal
-        # to single-device; falls back to it when the host has fewer
-        # devices -- see core/plan.py).
-        self.devices = 1 if devices is None else int(devices)
-        if self.devices < 1:
-            raise ValueError(f"devices must be >= 1, got {devices}")
+        # Device placement of every dispatch, as a structured MeshSpec:
+        # app=k shards the N axis of every batched dispatch over k local
+        # devices, rows=m additionally row-bands fused frames over a 2-D
+        # (app, rows) mesh with seam halo exchange.  Both are
+        # bitwise-equal to single-device and degrade to it when the host
+        # has fewer devices -- see core/plan.py; the degradation is
+        # recorded in FleetStats below.  The bare device-count kwarg is
+        # the deprecated spelling of MeshSpec(app=k).
+        if devices is not None:
+            d = int(devices)
+            if d < 1:
+                raise ValueError(f"devices must be >= 1, got {devices}")
+            if mesh is not None:
+                raise ValueError(
+                    "pass mesh=MeshSpec(...) or the deprecated bare device "
+                    "count, not both"
+                )
+            warnings.warn(
+                "the bare device-count kwarg of PixieFleet is deprecated: "
+                f"pass mesh=MeshSpec(app={d}) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            mesh = MeshSpec(app=d)
+        if mesh is not None and not isinstance(mesh, MeshSpec):
+            raise ValueError(f"mesh must be a MeshSpec, got {mesh!r}")
+        self.mesh = mesh or MeshSpec()
         # Ingest pipelining: "sync" packs, dispatches and materializes in
         # strict order; "async" double-buffers -- pooled canvases shipped
         # with device_put into a donated operand, outputs unpacked lazily
@@ -272,7 +309,7 @@ class PixieFleet:
         # App-axis tiles must also divide evenly across the mesh so the
         # plan executable never has to re-pad internally (padded_app_slots
         # then accounts for ALL padding).
-        self._app_tile = math.lcm(self.batch_tile, self.devices)
+        self._app_tile = math.lcm(self.batch_tile, self.mesh.app)
         self.min_pixel_batch = int(min_pixel_batch)
         # Fused frame canvases bucket H and W separately; the floor keeps
         # the same ~min_pixel_batch pixels per tile as the unfused path.
@@ -283,8 +320,18 @@ class PixieFleet:
         # Stacked settings banks: a repeat flush of the same tenant set
         # skips re-stacking N configs (keyed by their cache identities).
         self._banks = LRUCache(4 * max_overlays)
-        self.stats = FleetStats(backend=self.backend, devices=self.devices,
-                                ingest=self.ingest)
+        # Truthful mesh stamping: probe what the host can actually grant
+        # once, here, so dashboards never mistake the requested shape for
+        # the effective one (build_mesh silently falls back to
+        # single-device when local devices run short).
+        granted = self.mesh
+        if self.mesh.size > 1 and build_mesh(self.mesh) is None:
+            granted = MeshSpec()
+        self.stats = FleetStats(
+            self.backend, self.mesh.app, self.ingest,
+            mesh_requested=self.mesh.shape(), mesh_granted=granted.shape(),
+            mesh_degraded=granted != self.mesh,
+        )
         self._pending: List[Tuple[int, Tuple]] = []
         # Bounded: unredeemed tickets are evicted oldest-first so a service
         # that only consumes flush()'s return value cannot leak memory.
@@ -295,6 +342,12 @@ class PixieFleet:
         # dispatch_s accumulates time inside overlay executions; flush_s is
         # the wall time of the most recent flush.
         self.timings: Dict[str, float] = {"pack_s": 0.0, "dispatch_s": 0.0}
+
+    @property
+    def devices(self) -> int:
+        """App-axis mesh width (the reading side of the deprecated bare
+        device-count surface; front-ends and stats consume it)."""
+        return self.mesh.app
 
     # -- caches ---------------------------------------------------------------
 
@@ -342,11 +395,14 @@ class PixieFleet:
     def plan_for_dispatch(self, grid: GridSpec, *, fused: bool,
                           radius: Optional[int] = None) -> OverlayPlan:
         """The :class:`OverlayPlan` of one dispatch on this fleet: the
-        fleet contributes its backend, device, tiling and ingest axes,
-        the request group contributes grid/fusion/radius."""
+        fleet contributes its backend, mesh, tiling and ingest axes, the
+        request group contributes grid/fusion/radius.  Unfused dispatches
+        project the mesh to its app axis (pre-packed channels carry no
+        row structure to band-shard)."""
         return OverlayPlan(
             grid=grid, batched=True, fused=fused, radius=radius,
-            backend=self.backend, devices=self.devices,
+            backend=self.backend,
+            mesh=self.mesh if fused else self.mesh.app_only(),
             tile_rows=self.tile_rows if fused else None,
             ingest=self.ingest,
         )
@@ -509,15 +565,21 @@ class PixieFleet:
     def _ship_sharded_frames(self, mesh, n_tile: int, Hb: int, Wb: int,
                              dtype, items) -> jnp.ndarray:
         """Per-device canvas embed + ship for sharded async fused
-        dispatches: each mesh device gets its OWN pooled ``[n_tile/k, Hb,
-        Wb]`` host buffer (keyed by device in :meth:`_canvas`), its shard
-        of the tenant frames is embedded there, and the shards are shipped
-        independently with ``jax.device_put`` -- so per-shard ingest
-        overlaps across devices instead of serializing through one
-        whole-batch canvas whose single pending transfer gates every
-        shard's next fill.  The shards are assembled into ONE app-sharded
-        global array (``make_array_from_single_device_arrays`` over the
-        plan's mesh, spec ``P(APP_AXIS)`` -- exactly the layout the
+        dispatches: each mesh device gets its OWN pooled host buffer
+        (keyed by the device -- i.e. by its 2-D ``(app, rows)`` placement
+        -- in :meth:`_canvas`), its shard of the tenant frames is embedded
+        there, and the shards are shipped independently with
+        ``jax.device_put`` -- so per-shard ingest overlaps across devices
+        instead of serializing through one whole-batch canvas whose
+        single pending transfer gates every shard's next fill.  On a 1-D
+        mesh the buffer is ``[n_tile/k, Hb, Wb]`` (the app shard); on a
+        2-D mesh it is ``[n_tile/app, Hb/rows, Wb]`` -- device ``(i, j)``
+        fills app shard i's j-th row band, the row split the dispatch
+        executable shards over (``Hb`` was pre-rounded to a band
+        multiple, see :meth:`_dispatch_fused`).  The shards are assembled
+        into ONE mesh-sharded global array
+        (``make_array_from_single_device_arrays`` over the plan's mesh,
+        spec ``P(app)`` / ``P(app, rows)`` -- exactly the layout the
         shard_map executable expects, so jit inserts no resharding copy).
         Bitwise-identical to the single-canvas path.
 
@@ -526,25 +588,36 @@ class PixieFleet:
         zero-copy aliased device_put would let the pooled buffer's next
         ``fill(0)`` race still-unforced lazy outputs.  Real accelerators
         copy host->HBM by construction and skip the extra hop."""
-        from jax.sharding import NamedSharding, PartitionSpec
-        devs = list(mesh.devices.flat)
-        shard_n = n_tile // len(devs)
-        entries = [self._canvas((shard_n, Hb, Wb), dtype, device=d)
-                   for d in devs]
+        from repro.parallel.sharding import frame_sharding
+        grid2d = mesh.devices if mesh.devices.ndim == 2 else (
+            mesh.devices[:, None]
+        )
+        app_n, rows_n = grid2d.shape
+        shard_n = n_tile // app_n
+        band = Hb // rows_n
+        entries = [[self._canvas((shard_n, band, Wb), dtype, device=d)
+                    for d in row] for row in grid2d]
         for i, (_, p) in enumerate(items):
             H, W = p.hw
-            entries[i // shard_n].buf[i % shard_n, :H, :W] = p.payload
+            ai, slot = i // shard_n, i % shard_n
+            for rj in range(rows_n):
+                h = min(H - rj * band, band)
+                if h > 0:
+                    entries[ai][rj].buf[slot, :h, :W] = (
+                        p.payload[rj * band:rj * band + h]
+                    )
         shards = []
-        for e, d in zip(entries, devs):
-            if d.platform == "cpu":
-                shard = jax.device_put(jnp.array(e.buf, copy=True), d)
-            else:
-                shard = jax.device_put(e.buf, d)
-            e.pending = shard
-            shards.append(shard)
+        for ai in range(app_n):
+            for rj in range(rows_n):
+                e, d = entries[ai][rj], grid2d[ai, rj]
+                if d.platform == "cpu":
+                    shard = jax.device_put(jnp.array(e.buf, copy=True), d)
+                else:
+                    shard = jax.device_put(e.buf, d)
+                e.pending = shard
+                shards.append(shard)
         return jax.make_array_from_single_device_arrays(
-            (n_tile, Hb, Wb), NamedSharding(mesh, PartitionSpec(APP_AXIS)),
-            shards,
+            (n_tile, Hb, Wb), frame_sharding(mesh), shards,
         )
 
     def _fused_unpack(self, hws: Tuple[Tuple[int, int], ...], Hb: int, Wb: int):
@@ -663,6 +736,12 @@ class PixieFleet:
         n_tile = round_up(n, self._app_tile)
         Hb = pow2_bucket(max(p.hw[0] for _, p in items), self.min_image_side)
         Wb = pow2_bucket(max(p.hw[1] for _, p in items), self.min_image_side)
+        if self.mesh.rows > 1:
+            # Row-sharded plans band-split Hb across the rows axis: round
+            # it to a whole number of radius-floored bands so the sharded
+            # ship path and the executable's in-spec agree on the band
+            # split and the executable's own row padding is a no-op.
+            Hb = row_band(Hb, self.mesh.rows, radius) * self.mesh.rows
         configs = [p.cfg for _, p in items]
         # Tile padding on the app axis: replay config[0] on a zero frame.
         configs += [configs[0]] * (n_tile - n)

@@ -39,16 +39,41 @@ from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
 from repro.core.ingest import check_ingest
 from repro.core.interpreter import check_backend
+from repro.parallel.axes import MeshSpec
 from repro.runtime.fleet import FleetRequest, PixieFleet
 from repro.serve.service import (
     ImageJob, ImageService, JobHandle, LatencyStats, resolve_app,
 )
 
 
+def resolve_frontend_mesh(
+    mesh: Optional[MeshSpec], devices: Optional[int], owner: str,
+) -> Optional[MeshSpec]:
+    """Shared deprecation shim for the front-ends' bare device-count
+    kwarg: folds it into ``mesh=MeshSpec(app=k)`` with a warning, and
+    rejects giving both spellings at once."""
+    if devices is None:
+        return mesh
+    d = int(devices)
+    if d < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    if mesh is not None:
+        raise ValueError(
+            "pass mesh=MeshSpec(...) or the deprecated bare device count, "
+            "not both"
+        )
+    warnings.warn(
+        f"the bare device-count kwarg of {owner} is deprecated: pass "
+        f"mesh=MeshSpec(app={d}) instead",
+        DeprecationWarning, stacklevel=3,
+    )
+    return MeshSpec(app=d)
+
+
 def build_fleet(
     fleet: Optional[PixieFleet],
     backend: Optional[str],
-    devices: Optional[int],
+    mesh: Optional[MeshSpec],
     ingest: Optional[str],
 ) -> PixieFleet:
     """Resolve a front-end's fleet: pass-through with axis-conflict checks
@@ -61,10 +86,10 @@ def build_fleet(
                 f"backend={backend!r} conflicts with the provided fleet's "
                 f"backend {fleet.backend!r}; configure the PixieFleet instead"
             )
-    if devices is not None and fleet is not None and fleet.devices != devices:
+    if mesh is not None and fleet is not None and fleet.mesh != mesh:
         raise ValueError(
-            f"devices={devices!r} conflicts with the provided fleet's "
-            f"devices {fleet.devices!r}; configure the PixieFleet instead"
+            f"mesh={mesh} conflicts with the provided fleet's "
+            f"mesh {fleet.mesh}; configure the PixieFleet instead"
         )
     if ingest is not None:
         check_ingest(ingest)
@@ -73,7 +98,7 @@ def build_fleet(
                 f"ingest={ingest!r} conflicts with the provided fleet's "
                 f"ingest {fleet.ingest!r}; configure the PixieFleet instead"
             )
-    return fleet or PixieFleet(backend=backend or "xla", devices=devices,
+    return fleet or PixieFleet(backend=backend or "xla", mesh=mesh,
                                ingest=ingest or "sync")
 
 
@@ -91,10 +116,12 @@ class FleetFrontend(ImageService):
         registry: Optional[Dict[str, object]] = None,
         max_done: int = 1024,
         backend: Optional[str] = None,
-        devices: Optional[int] = None,
+        mesh: Optional[MeshSpec] = None,
         ingest: Optional[str] = None,
+        devices: Optional[int] = None,
     ):
-        self.fleet = build_fleet(fleet, backend, devices, ingest)
+        mesh = resolve_frontend_mesh(mesh, devices, "FleetFrontend")
+        self.fleet = build_fleet(fleet, backend, mesh, ingest)
         # Name -> DFG factory; defaults to the paper's application library.
         self.registry = dict(registry) if registry is not None else dict(app_lib.ALL_APPS)
         self._arrivals: Dict[int, Tuple[str, float]] = {}
@@ -194,8 +221,15 @@ class FleetFrontend(ImageService):
         return self.fleet.backend
 
     @property
+    def mesh(self) -> MeshSpec:
+        """Device-placement :class:`MeshSpec` of the underlying fleet's
+        dispatch plans."""
+        return self.fleet.mesh
+
+    @property
     def devices(self) -> int:
-        """App-axis mesh width of the underlying fleet's dispatch plans."""
+        """App-axis mesh width of the underlying fleet's dispatch plans
+        (the reading side of the deprecated bare device-count surface)."""
         return self.fleet.devices
 
     @property

@@ -64,8 +64,9 @@ from repro.core import applications as app_lib
 from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
 from repro.core.tiling import pow2_bucket
+from repro.parallel.axes import MeshSpec
 from repro.runtime.fleet import FleetRequest, PixieFleet
-from repro.serve.fleet_frontend import build_fleet
+from repro.serve.fleet_frontend import build_fleet, resolve_frontend_mesh
 from repro.serve.service import (
     AdmissionError, ImageJob, ImageService, JobHandle, LatencyStats,
     resolve_app,
@@ -118,11 +119,13 @@ class StreamingFrontend(ImageService):
         deadline_margin_s: float = 0.002,
         max_linger_s: float = 0.002,
         backend: Optional[str] = None,
-        devices: Optional[int] = None,
+        mesh: Optional[MeshSpec] = None,
         ingest: Optional[str] = None,
+        devices: Optional[int] = None,
         autostart: bool = True,
     ):
-        self.fleet = build_fleet(fleet, backend, devices, ingest)
+        mesh = resolve_frontend_mesh(mesh, devices, "StreamingFrontend")
+        self.fleet = build_fleet(fleet, backend, mesh, ingest)
         self.registry = dict(registry) if registry is not None else dict(app_lib.ALL_APPS)
         self.target_batch = int(target_batch or self.fleet.batch_tile)
         if self.target_batch < 1:
@@ -258,6 +261,10 @@ class StreamingFrontend(ImageService):
     @property
     def backend(self) -> str:
         return self.fleet.backend
+
+    @property
+    def mesh(self) -> MeshSpec:
+        return self.fleet.mesh
 
     @property
     def devices(self) -> int:

@@ -1,7 +1,7 @@
 """Grep-style lint: deprecated surfaces must have zero call sites under
 ``src/`` or ``benchmarks/``.
 
-Two deprecations are pinned here:
+Three deprecations are pinned here:
 
 * PR 4 collapsed the ``make_*_overlay_fn`` factory matrix into
   ``OverlayPlan`` + ``compile_plan`` and left the factories as
@@ -12,6 +12,12 @@ Two deprecations are pinned here:
   ``JobHandle``); ``tick``/``take`` survive only as DeprecationWarning
   shims on ``FleetFrontend``, and nothing in production/bench code may
   call them.
+* PR 8 replaced the bare device-count kwarg threaded through
+  ``OverlayPlan`` / ``PixieFleet`` / ``Pixie`` / both front-ends with the
+  structured ``MeshSpec(app=k, rows=m)`` placement; the old spelling
+  survives only as a DeprecationWarning shim, and nothing in
+  production/bench code (including docstrings and error messages, which
+  must name the MeshSpec spelling) may use it.
 
 (``tests/`` is exempt: the shim-parity tests call both on purpose.)
 """
@@ -33,6 +39,13 @@ FACTORY_CALL = re.compile(r"(?<!def )\bmake_(?:batched_)?(?:fused_)?overlay_fn\s
 # it has no call sites under the scanned scopes, which this lint also
 # guarantees stays true.
 PROTOCOL_CALL = re.compile(r"(?<!np)\.(?:tick|take)\s*\(")
+# The deprecated bare device-count kwarg, ANYWHERE in production/bench
+# sources -- call sites, docstrings, error text alike (new code must name
+# the MeshSpec spelling, so even prose mentions are pinned to zero).  The
+# shim *parameter declarations* use annotation syntax (``devices:``) and
+# never match; ``!=``/``==`` comparisons are excluded by the negative
+# lookahead.
+DEVICES_KWARG = re.compile(r"\bdevices=(?!=)")
 
 
 def _offenders(pattern) -> list:
@@ -61,4 +74,13 @@ def test_no_legacy_tick_take_call_sites():
         "deprecated tick/take front-end protocol called from production/"
         "bench code -- submit() returns a JobHandle; use .result() / "
         "flush(): " + ", ".join(offenders)
+    )
+
+
+def test_no_bare_devices_kwarg_sites():
+    offenders = _offenders(DEVICES_KWARG)
+    assert not offenders, (
+        "deprecated bare device-count kwarg used in production/bench "
+        "code -- pass mesh=MeshSpec(app=k, rows=m) instead: "
+        + ", ".join(offenders)
     )
