@@ -1,0 +1,269 @@
+"""Benchmark 7 — pipeline throughput: device-resident multi-stage chains.
+
+A chained image pipeline (gauss3 -> sobel_x -> threshold) can run two ways
+on the overlay fleet:
+
+  staged      one fleet flush PER STAGE -- each stage's output leaves the
+              device, lands on the host, and is re-submitted as the next
+              stage's input frame (canvas embed + tap-bank formation paid
+              again).  This is the pre-pipeline serving reality: chains
+              are just sequences of single-stage jobs with host hops.
+  fused       ONE flush of pipeline requests -- `compile_plan` folds the
+              whole chain into a single `OverlayExecutable`; the
+              intermediate is re-tapped on device (no unpack/repack, no
+              host hop) and the stage loop runs inside one jit (XLA) /
+              one megakernel over the same VMEM slabs (pallas).
+
+Identical inputs, bitwise-identical outputs (asserted against the staged
+oracle BEFORE timing, on both backends).  Emits a machine-readable
+``BENCH {json}`` line; ``--out`` MERGES the result as a ``"pipeline"``
+block into the (existing) fleet BENCH JSON so the trend artifact stays a
+single file, and ``--check`` enforces the fused >= 1.5x staged floor.
+
+Usage:
+  python benchmarks/pipeline_throughput.py                # full: 256^2 x 8
+  python benchmarks/pipeline_throughput.py --smoke        # CI-sized (<30 s)
+  python benchmarks/pipeline_throughput.py --check        # exit 1 on floors
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import MeshSpec
+from repro.core import applications as apps
+from repro.core.grid import custom
+from repro.core.place import level_demand
+from repro.kernels.vcgra import default_interpret
+from repro.runtime.fleet import FleetRequest, PixieFleet
+
+# The depth-3 chain of the acceptance run: radii 1/1/0, so the fused
+# executable carries total pad 2 while the staged path pays three full
+# ingest/unpack round trips.
+CHAIN = ["gauss3", "sobel_x", "threshold"]
+
+# Fused must beat the staged-sequential oracle end to end by this factor
+# (the measured margin is ~50x at 256^2 -- the floor guards regressions,
+# e.g. an accidental host hop sneaking back between stages).
+FUSED_FLOOR_VS_STAGED = 1.5
+
+# Same rationale as fleet_throughput.PALLAS_FLOOR_VS_XLA: the megakernel
+# interprets on CPU CI, so the floor only catches catastrophic breakage.
+PALLAS_FLOOR_VS_XLA = 0.05
+
+
+def chain_grid(name: str = "pipe_shared", slack: int = 1):
+    """One grid big enough for every stage of CHAIN (per-level width =
+    max demand across the stage DFGs + slack) -- the same shared-overlay
+    construction the fleet test suites use, so every stage of the chain
+    maps onto ONE overlay executable."""
+    dfgs = [apps.ALL_APPS[n]() for n in CHAIN]
+    demands = [level_demand(g) for g in dfgs]
+    depth = max(len(d) for d in demands)
+    demands = [list(d) + [1] * (depth - len(d)) for d in demands]
+    widths = [max(d[lvl] for d in demands) + slack for lvl in range(depth)]
+    return custom(name, max(len(g.inputs) for g in dfgs), widths, 1)
+
+
+def _time(fn, reps: int) -> float:
+    fn()  # warm / compile (fleet outputs are host arrays: already forced)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n_apps: int, image_hw: int, reps: int) -> dict:
+    rng = np.random.default_rng(0)
+    grid = chain_grid()
+    frames = [
+        rng.integers(0, 256, (image_hw, image_hw)).astype(np.int32)
+        for _ in range(n_apps)
+    ]
+
+    # -- staged-sequential oracle: one flush per stage, host hop between --
+    staged_fleet = PixieFleet(default_grid=grid, batch_tile=n_apps)
+
+    def staged():
+        cur = frames
+        for stage in CHAIN:
+            cur = [
+                np.asarray(y)
+                for y in staged_fleet.run_many(
+                    [FleetRequest(app=stage, image=f, grid=grid) for f in cur]
+                )
+            ]
+        return cur
+
+    # -- fused chain: ONE flush of pipeline requests ----------------------
+    fused_fleet = PixieFleet(default_grid=grid, batch_tile=n_apps)
+    requests = [
+        FleetRequest(pipeline=CHAIN, image=f, grid=grid) for f in frames
+    ]
+
+    def fused():
+        return fused_fleet.run_many(requests)
+
+    # bitwise parity BEFORE timing: fused chain == staged per-stage oracle
+    staged_out = staged()
+    fused_out = fused()
+    for i in range(n_apps):
+        np.testing.assert_array_equal(np.asarray(fused_out[i]), staged_out[i])
+    assert fused_fleet.stats.pipeline_dispatches >= 1, \
+        fused_fleet.stats.as_dict()
+    # compile-once invariant: the whole chain is ONE plan-cache entry.
+    assert fused_fleet._overlays.misses == 1, fused_fleet.stats.as_dict()
+
+    t_staged = _time(staged, reps)
+    t_fused = _time(fused, reps)
+
+    # -- pallas backend: the stage loop inside the DMA megakernel ---------
+    pallas_fleet = PixieFleet(default_grid=grid, batch_tile=n_apps,
+                              backend="pallas")
+    def pallas_fused():
+        return pallas_fleet.run_many(requests)
+
+    pallas_out = pallas_fused()
+    for i in range(n_apps):
+        np.testing.assert_array_equal(np.asarray(pallas_out[i]), staged_out[i])
+    t_pallas = _time(pallas_fused, max(1, reps // 3))
+
+    # -- row-sharded fused chain: per-stage halo exchange between stages --
+    # Requested unconditionally; a single-device host degrades to the
+    # bitwise fallback and the stamp records requested vs granted (same
+    # truthfulness contract as fleet_throughput's mesh block).
+    n_dev = len(jax.local_devices())
+    mesh_spec = MeshSpec(rows=2) if n_dev >= 2 else MeshSpec()
+    mesh_fleet = PixieFleet(default_grid=grid, batch_tile=n_apps,
+                            mesh=mesh_spec)
+
+    def mesh_fused():
+        return mesh_fleet.run_many(requests)
+
+    mesh_out = mesh_fused()
+    for i in range(n_apps):
+        np.testing.assert_array_equal(np.asarray(mesh_out[i]), staged_out[i])
+    t_mesh = _time(mesh_fused, max(1, reps // 3))
+
+    pixels = image_hw * image_hw * n_apps
+    return {
+        "bench": "pipeline_throughput",
+        "chain": CHAIN,
+        "depth": len(CHAIN),
+        "n_apps": n_apps,
+        "image": [image_hw, image_hw],
+        "grid": grid.name,
+        "device_count": n_dev,
+        "staged_s_per_round": t_staged,
+        "fused_s_per_round": t_fused,
+        "staged_chains_per_s": n_apps / t_staged,
+        "fused_chains_per_s": n_apps / t_fused,
+        "staged_mpixels_per_s": pixels / t_staged / 1e6,
+        "fused_mpixels_per_s": pixels / t_fused / 1e6,
+        "fused_vs_staged": t_staged / t_fused,
+        "fused_floor_vs_staged": FUSED_FLOOR_VS_STAGED,
+        "pipeline_dispatches": fused_fleet.stats.pipeline_dispatches,
+        "fleet_stats": fused_fleet.stats.as_dict(),
+        "backends": {
+            "xla": {"fused_s_per_round": t_fused,
+                    "fused_chains_per_s": n_apps / t_fused},
+            "pallas": {"fused_s_per_round": t_pallas,
+                       "fused_chains_per_s": n_apps / t_pallas,
+                       "interpret_mode": default_interpret()},
+        },
+        "pallas_vs_xla_fused": t_fused / t_pallas,
+        "pallas_floor_vs_xla": PALLAS_FLOOR_VS_XLA,
+        "mesh": {
+            "requested": list(mesh_fleet.stats.mesh_requested),
+            "granted": list(mesh_fleet.stats.mesh_granted),
+            "degraded": mesh_fleet.stats.mesh_degraded,
+            "fused_s_per_round": t_mesh,
+            "fused_chains_per_s": n_apps / t_mesh,
+        },
+    }
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    p.add_argument("--n-apps", type=int, default=None)
+    p.add_argument("--image", type=int, default=None, help="square image side")
+    p.add_argument("--reps", type=int, default=None)
+    p.add_argument("--out", type=str, default=None,
+                   help="merge a 'pipeline' block into this BENCH JSON "
+                        "(read-update-write; created if missing)")
+    p.add_argument("--check", action="store_true",
+                   help="exit nonzero unless fused >= "
+                        f"{FUSED_FLOOR_VS_STAGED}x staged e2e and pallas "
+                        ">= floor vs xla")
+    a = p.parse_args(argv)
+
+    # The acceptance configuration is the full run: depth 3 at 256^2 with
+    # 8 tenants.  Smoke keeps the same depth and tenant count on a
+    # smaller frame so CI still exercises every code path.
+    n_apps = a.n_apps or 8
+    image = a.image or (64 if a.smoke else 256)
+    reps = a.reps or (3 if a.smoke else 5)
+
+    result = run(n_apps, image, reps)
+    mode = "interpret" if result["backends"]["pallas"]["interpret_mode"] \
+        else "compiled"
+    print(f"pipeline throughput: {'+'.join(CHAIN)} on {result['grid']}, "
+          f"{n_apps} chains, {image}x{image} px, {reps} reps")
+    print(f"  staged       {result['staged_chains_per_s']:10.1f} chains/s   "
+          f"{result['staged_mpixels_per_s']:8.2f} Mpx/s   "
+          f"({len(CHAIN)} flushes, host hop between stages)")
+    print(f"  fused        {result['fused_chains_per_s']:10.1f} chains/s   "
+          f"{result['fused_mpixels_per_s']:8.2f} Mpx/s   "
+          f"(1 flush, device-resident intermediates)")
+    print(f"  pallas       "
+          f"{result['backends']['pallas']['fused_chains_per_s']:10.1f} "
+          f"chains/s   (megakernel stage loop, {mode}; "
+          f"x{result['pallas_vs_xla_fused']:.2f} vs xla)")
+    m = result["mesh"]
+    state = "DEGRADED to" if m["degraded"] else "granted"
+    print(f"  mesh         {m['fused_chains_per_s']:10.1f} chains/s   "
+          f"(requested {m['requested'][0]}x{m['requested'][1]}, {state} "
+          f"{m['granted'][0]}x{m['granted'][1]})")
+    print(f"  speedup      x{result['fused_vs_staged']:.2f} fused vs staged "
+          f"(floor x{FUSED_FLOOR_VS_STAGED})")
+
+    print("BENCH " + json.dumps(result))
+    if a.out:
+        os.makedirs(os.path.dirname(a.out) or ".", exist_ok=True)
+        merged = {}
+        if os.path.exists(a.out):
+            with open(a.out) as f:
+                merged = json.load(f)
+        merged["pipeline"] = result
+        with open(a.out, "w") as f:
+            json.dump(merged, f, indent=2)
+        print(f"wrote {a.out} (pipeline block)")
+
+    if a.check:
+        fails = []
+        if result["fused_vs_staged"] < FUSED_FLOOR_VS_STAGED:
+            fails.append(
+                f"fused chain x{result['fused_vs_staged']:.2f} < "
+                f"x{FUSED_FLOOR_VS_STAGED} vs staged"
+            )
+        if result["pallas_vs_xla_fused"] < PALLAS_FLOOR_VS_XLA:
+            fails.append(
+                f"pallas pipeline x{result['pallas_vs_xla_fused']:.2f} < "
+                f"x{PALLAS_FLOOR_VS_XLA} vs xla"
+            )
+        if fails:
+            raise SystemExit("FAIL: " + "; ".join(fails))
+        print(f"CHECK OK: fused >= x{FUSED_FLOOR_VS_STAGED} staged, "
+              f"pallas >= x{PALLAS_FLOOR_VS_XLA} xla")
+    return result
+
+
+if __name__ == "__main__":
+    main()

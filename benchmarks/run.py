@@ -6,14 +6,17 @@
   roofline_table     arch x shape roofline from dry-run artifacts (§Roofline)
   fleet_throughput   multi-tenant batched overlay vs sequential dispatch
   serving_latency    streaming front-end latency percentiles at offered load
+  pipeline_throughput  device-resident fused chains vs staged per-stage flushes
 
 Prints ``name,us_per_call,derived`` CSV rows at the end for machine
 consumption, after the human-readable tables.
 
 ``--check`` additionally enforces the fleet-throughput floors (batched
-dispatch and fused e2e both >= 2x) and the serving-latency floors (p99
+dispatch and fused e2e both >= 2x), the serving-latency floors (p99
 bounded at smoke load, zero deadline misses, partial tiles under deadline
-pressure), and writes the BENCH JSONs to the stable
+pressure), and the pipeline floor (fused chain >= 1.5x the staged
+per-stage oracle, merged as a ``pipeline`` block into the fleet JSON),
+and writes the BENCH JSONs to the stable
 ``artifacts/bench/BENCH_fleet.json`` / ``artifacts/bench/BENCH_serving.json``
 paths so CI runs accumulate trajectories under one artifact name each.
 """
@@ -36,11 +39,11 @@ def main(argv=None) -> None:
                         f"JSON to {BENCH_FLEET_JSON}")
     args = p.parse_args(argv)
 
-    from benchmarks import (
-        compile_time, fleet_throughput, resource_table, roofline_table,
-        serving_latency, sobel_throughput,
-    )
-
+    # Each benchmark imports INSIDE its own try block: a single broken
+    # module (or a missing optional dep) must fail that one benchmark
+    # loudly -- counted in `failures`, nonzero exit -- instead of an
+    # import error here silently killing the whole runner before any
+    # floor is checked.
     csv_rows = [("name", "us_per_call", "derived")]
     failures = []
 
@@ -48,6 +51,8 @@ def main(argv=None) -> None:
     print("Benchmark 1: resource table (paper Table I analogue)")
     print("=" * 72)
     try:
+        from benchmarks import resource_table
+
         rows = resource_table.main()
         for r in rows:
             csv_rows.append((
@@ -64,6 +69,8 @@ def main(argv=None) -> None:
     print("Benchmark 2: compilation gap (paper Sec. V-E analogue)")
     print("=" * 72)
     try:
+        from benchmarks import compile_time
+
         rows = compile_time.main()
         for r in rows:
             csv_rows.append((f"compile/{r['stage']}", f"{r['seconds']*1e6:.1f}", ""))
@@ -76,6 +83,8 @@ def main(argv=None) -> None:
     print("Benchmark 3: Sobel execution paths (paper Sec. IV demo)")
     print("=" * 72)
     try:
+        from benchmarks import sobel_throughput
+
         rows = sobel_throughput.main()
         for r in rows:
             csv_rows.append((
@@ -91,6 +100,8 @@ def main(argv=None) -> None:
     print("Benchmark 4: roofline table (arch x shape, from dry-run artifacts)")
     print("=" * 72)
     try:
+        from benchmarks import roofline_table
+
         rows = roofline_table.main()
         for r in rows:
             if r.get("bottleneck") not in ("SKIP", "ERROR", None):
@@ -108,6 +119,8 @@ def main(argv=None) -> None:
     print("Benchmark 5: fleet throughput (multi-tenant batched overlay)")
     print("=" * 72)
     try:
+        from benchmarks import fleet_throughput
+
         fleet_args = ["--smoke"]
         if args.check:
             # Mirror CI's smoke-bench job: the --frames sweep adds the
@@ -134,6 +147,8 @@ def main(argv=None) -> None:
     print("Benchmark 6: serving latency (streaming front-end, offered load)")
     print("=" * 72)
     try:
+        from benchmarks import serving_latency
+
         serving_args = ["--smoke"]
         if args.check:
             serving_args += ["--check", "--out", BENCH_SERVING_JSON]
@@ -149,6 +164,30 @@ def main(argv=None) -> None:
     except (Exception, SystemExit) as e:
         traceback.print_exc()
         failures.append(("serving_latency", e))
+
+    print()
+    print("=" * 72)
+    print("Benchmark 7: pipeline throughput (fused chains vs staged flushes)")
+    print("=" * 72)
+    try:
+        from benchmarks import pipeline_throughput
+
+        pipe_args = ["--smoke"]
+        if args.check:
+            # Runs AFTER Benchmark 5 so the 'pipeline' block merges into
+            # the fleet JSON that fleet_throughput already wrote -- CI
+            # uploads ONE artifact covering both.
+            pipe_args += ["--check", "--out", BENCH_FLEET_JSON]
+        r = pipeline_throughput.main(pipe_args)
+        csv_rows.append((
+            "pipeline/fused_vs_staged",
+            f"{1e6 / r['fused_chains_per_s']:.1f}",
+            f"speedup={r['fused_vs_staged']:.2f};depth={r['depth']};"
+            f"chains={r['n_apps']}",
+        ))
+    except (Exception, SystemExit) as e:
+        traceback.print_exc()
+        failures.append(("pipeline_throughput", e))
 
     print()
     print("name,us_per_call,derived")

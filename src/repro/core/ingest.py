@@ -207,6 +207,44 @@ class IngestPlan:
             jnp.stack([jnp.asarray(p.const_vals, dtype) for p in plans]),
         )
 
+    def at_radius(self, radius: int) -> "IngestPlan":
+        """Re-plan the same channel production rules against a different
+        tap-bank radius.
+
+        Pipeline stages (``repro.core.plan.PipelineSpec``) may mix radii --
+        a 3x3 blur feeding a pointwise threshold wants a radius-0 bank for
+        the second stage, not a 9-tap bank it reads one row of.  Each tap
+        channel is translated by its *(dj, di)* offset into the new bank's
+        row-major layout; const and zero channels are radius-independent.
+        Raises :class:`IngestError` when a channel reads a tap out of the
+        new radius's reach (shrinking below the app's stencil is a mapping
+        error, not something to silently zero-fill)."""
+        r = int(radius)
+        if r == self.radius:
+            return self
+        offsets = tap_offsets(self.radius)
+        lookup = {off: t for t, off in enumerate(tap_offsets(r))}
+        zero = len(lookup)
+        tap_sel = np.full((self.tap_sel.shape[0],), zero, dtype=np.int32)
+        for c, t in enumerate(self.tap_sel):
+            if int(t) == self.zero_row:
+                continue
+            off = offsets[int(t)]
+            if off not in lookup:
+                name = (
+                    self.channel_names[c]
+                    if c < len(self.channel_names) else f"#{c}"
+                )
+                raise IngestError(
+                    f"channel {name!r} reads tap {off}, out of reach of a "
+                    f"radius-{r} bank"
+                )
+            tap_sel[c] = lookup[off]
+        return IngestPlan(
+            radius=r, tap_sel=tap_sel, const_vals=self.const_vals.copy(),
+            channel_names=self.channel_names,
+        )
+
     # -- (de)serialization (rides along inside VCGRAConfig.to_json) ---------
 
     def to_dict(self) -> dict:

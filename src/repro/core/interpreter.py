@@ -371,6 +371,68 @@ def tiled_batched_fused_overlay_step(
     return y[:, :, : H * W]
 
 
+def valid_pixel_mask(hw: jnp.ndarray, H: int, W: int) -> jnp.ndarray:
+    """``[N, H, W]`` bool mask of each app's true frame region inside a
+    padded canvas: ``hw`` is int32 ``[N, 2]`` of per-app ``(rows, cols)``.
+
+    The pipeline executors zero everything outside it between stages: a
+    stage's output on canvas padding is NOT zero (its taps read real frame
+    pixels), but the next stage's border must read zeros -- exactly what
+    the staged oracle sees when each intermediate is re-embedded into a
+    fresh zero canvas.  Masking is what keeps the fused chain bitwise
+    equal to the per-stage dispatch sequence on bucketed canvases.
+    """
+    hw = jnp.asarray(hw, jnp.int32)
+    rows_in = jnp.arange(H, dtype=jnp.int32)[None, :, None] < hw[:, 0][:, None, None]
+    cols_in = jnp.arange(W, dtype=jnp.int32)[None, None, :] < hw[:, 1][:, None, None]
+    return jnp.logical_and(rows_in, cols_in)
+
+
+def forward_stage_output(ys: jnp.ndarray, out_ch: jnp.ndarray,
+                         valid: jnp.ndarray) -> jnp.ndarray:
+    """Select each app's forwarded output channel from a stage's
+    ``[N, K, H*W]`` result and zero it outside the app's true frame
+    region: the inter-stage hop of the operand-settings pipeline chain.
+    ``out_ch`` is int32 ``[N]`` (runtime data, like every other setting);
+    ``valid`` is :func:`valid_pixel_mask`'s ``[N, H, W]``."""
+    n, H, W = valid.shape
+    y = jnp.take_along_axis(
+        ys, out_ch.astype(jnp.int32)[:, None, None], axis=1
+    )[:, 0]
+    return jnp.where(valid, y.reshape(n, H, W), 0)
+
+
+def pipeline_batched_fused_step(
+    grid: GridSpec, radii, stage_fn, stage_settings, hw, images,
+) -> jnp.ndarray:
+    """Operand-settings pipeline chain: N per-app stage chains on N raw
+    frames in ONE dispatch, every intermediate staying a device-resident
+    ``[N, H, W]`` frame.
+
+    ``radii`` are the trace-time per-stage tap radii (executable shape);
+    ``stage_settings`` is runtime data -- one ``(stacked_configs,
+    stacked_ingests, out_ch)`` triple per stage, leaves carrying the
+    leading app axis N -- so this variant shard_maps over an app/rows mesh
+    (SPMD traces once; per-shard constants are impossible there).  The
+    single-device XLA path instead bakes the chain at trace time
+    (``plan._pipeline_specialized_fn``); both are bitwise equal to the
+    staged per-stage oracle.  ``stage_fn(radius, configs, ingests, x)``
+    runs one stage (the plan supplies the backend's batched fused step,
+    tiled or not); the last stage returns its full ``[N, K, H*W]`` output
+    -- its ``out_ch`` entry is forwarding metadata with nothing to feed.
+    """
+    x = jnp.asarray(images, grid.dtype)
+    n, H, W = x.shape
+    valid = valid_pixel_mask(hw, H, W)
+    ys = None
+    for si, r in enumerate(radii):
+        configs, ingests, out_ch = stage_settings[si]
+        ys = stage_fn(r, configs, ingests, x)
+        if si < len(radii) - 1:
+            x = forward_stage_output(ys, out_ch, valid)
+    return ys
+
+
 def make_batched_fused_overlay_fn(grid: GridSpec, radius: int = 1,
                                   backend: str = "xla"):
     """Deprecated: use ``compile_plan(OverlayPlan(grid=grid, batched=True,

@@ -28,8 +28,11 @@ from repro.core import interpreter, specialize
 from repro.core.bitstream import VCGRAConfig, assemble
 from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
+from repro.core.ingest import IngestPlan
 from repro.core.place import place
-from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan
+from repro.core.plan import (
+    OverlayExecutable, OverlayPlan, PipelineSpec, compile_plan,
+)
 from repro.core.route import route
 from repro.parallel.axes import MeshSpec
 
@@ -114,6 +117,7 @@ class Pixie:
         self._overlay_fn: Optional[OverlayExecutable] = None
         self._batched_overlay_fn: Optional[OverlayExecutable] = None
         self._fused_fns: Dict[int, OverlayExecutable] = {}  # radius -> executable
+        self._pipeline_fns: Dict[PipelineSpec, OverlayExecutable] = {}
         self._config_jax = None
         self._ingest_jax = None
         self._spec_fn: Optional[Callable] = None
@@ -296,6 +300,72 @@ class Pixie:
             taps = apps.stencil_inputs(image)
             feed = {k: v for k, v in taps.items() if k in self.config.input_order}
             y = self(**feed)
+        return y.reshape((-1, H, W))[0] if y.shape[0] == 1 else y.reshape((-1, H, W))
+
+
+    def run_pipeline(
+        self,
+        chain: Sequence[Union[DFG, VCGRAConfig, str]],
+        image: jnp.ndarray,
+        out_channels: Optional[Sequence[int]] = None,
+    ) -> jnp.ndarray:
+        """Run a multi-stage application chain over one [H, W] frame as
+        ONE device-resident executable.
+
+        ``chain``: ordered stages (DFGs mapped here, pre-mapped configs,
+        or library app names); stage i's ``out_channels[i]`` output
+        (default channel 0) feeds stage i+1's ingest taps without the
+        intermediate ever leaving the device -- a pipeline
+        :class:`~repro.core.plan.OverlayPlan` compiled once per distinct
+        chain and cached on this instance.  A single-stage chain is just
+        :meth:`run_image` (same plan, same caches).  Conventional mode
+        only; every stage needs an ingest plan (fused ingest end to end).
+        Returns [H, W] (or [num_outputs, H, W]) of the final stage.
+        """
+        if self.mode != "conventional":
+            raise RuntimeError(
+                "run_pipeline requires mode='conventional' (the "
+                "parameterized path specializes a single application per "
+                "executable)"
+            )
+        cfgs = []
+        for stage in chain:
+            if isinstance(stage, str):
+                stage = apps.ALL_APPS[stage]()
+            cfgs.append(stage if isinstance(stage, VCGRAConfig)
+                        else self.map(stage))
+        if not cfgs:
+            raise ValueError("chain must name at least one stage")
+        for cfg in cfgs:
+            if cfg.ingest is None:
+                raise ValueError(
+                    f"pipeline stage {cfg.app_name!r} has no ingest plan; "
+                    f"chains need fused-ingest stages end to end"
+                )
+        spec = PipelineSpec.chain(cfgs, out_channels)
+        if spec.depth == 1:
+            self.load(cfgs[0])
+            return self.run_image(image)
+        fn = self._pipeline_fns.get(spec)
+        if fn is None:
+            fn = compile_plan(OverlayPlan(
+                grid=self.grid, batched=True, pipeline=(spec,),
+                backend=self.backend, mesh=self.mesh,
+            ))
+            self._pipeline_fns[spec] = fn
+        H, W = image.shape
+        settings = tuple(
+            (
+                VCGRAConfig.stack([st.config]),
+                IngestPlan.stack([st.config.ingest], self.grid.dtype),
+                jnp.asarray([st.out_channel], jnp.int32),
+            )
+            for st in spec.stages
+        )
+        hw = jnp.asarray([[H, W]], jnp.int32)
+        t0 = time.perf_counter()
+        y = fn(settings, hw, jnp.asarray(image)[None])[0]
+        self.timings["run_pipeline_s"] = time.perf_counter() - t0
         return y.reshape((-1, H, W))[0] if y.shape[0] == 1 else y.reshape((-1, H, W))
 
 

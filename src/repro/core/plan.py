@@ -48,25 +48,215 @@ deprecated shims delegating here.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import warnings
 from functools import partial
-from typing import Callable, Dict, Optional, Tuple, Union
+from typing import Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import interpreter
+from repro.core.bitstream import VCGRAConfig
 from repro.core.grid import GridSpec
 from repro.core.ingest import INGEST_MODES, check_ingest  # noqa: F401
 from repro.core.tiling import TILE_AUTO, check_tile_rows, row_band
 from repro.parallel.axes import (
-    MeshSpec, build_mesh, shard_apps, shard_apps_rows,
+    MeshSpec, build_mesh, shard_apps, shard_apps_rows, shard_pipeline_rows,
 )
 
 #: Execution backends a plan may name (re-exported from the interpreter,
 #: which owns the validation shared with the fleet and the front-end).
 BACKENDS = interpreter.BACKENDS
 
+
+# -- the pipeline axis ---------------------------------------------------------
+
+
+def _config_digest(cfg: VCGRAConfig) -> str:
+    """Canonical content digest of one stage's settings: everything that
+    shapes the traced executable (grid structure name, opcodes, mux
+    selects, output taps, ingest production rules, const coefficients).
+    sha1 over raw bytes -- deterministic across processes, unlike
+    ``hash()`` under PYTHONHASHSEED randomization -- because pipeline
+    digests end up in plan keys that bench JSON and stats compare across
+    runs.  ``VCGRAConfig`` itself stays an unfrozen builder object; the
+    digest is what makes a stage *hashable* without freezing it."""
+    h = hashlib.sha1()
+    h.update(cfg.grid_name.encode())
+    for ops_lvl in cfg.opcodes:
+        h.update(np.asarray(ops_lvl, np.int32).tobytes())
+    for sel_lvl in cfg.selects:
+        h.update(np.asarray(sel_lvl, np.int32).tobytes())
+    h.update(np.asarray(cfg.out_sel, np.int32).tobytes())
+    h.update(repr(tuple(cfg.input_order)).encode())
+    h.update(
+        repr(sorted((str(k), float(v)) for k, v in cfg.const_values.items()))
+        .encode()
+    )
+    ing = cfg.ingest
+    if ing is not None:
+        h.update(str(int(ing.radius)).encode())
+        h.update(np.asarray(ing.tap_sel, np.int32).tobytes())
+        h.update(np.asarray(ing.const_vals, np.float64).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PipelineStage:
+    """One stage of a pipeline chain: a mapped app config plus which of
+    its output channels feeds the next stage's ingest taps.
+
+    ``config`` must carry an :class:`~repro.core.ingest.IngestPlan` (every
+    stage eats a raw frame -- the previous stage's device-resident
+    intermediate); its radius IS the stage's tap radius.  Use
+    :meth:`at_radius` to re-plan a stage at a different radius (e.g. a
+    pointwise threshold stage on a radius-0 bank).  ``out_channel`` on the
+    LAST stage is forwarding metadata with nothing to feed; the chain
+    returns that stage's full ``[K, H*W]`` output like any fused dispatch.
+
+    Hash/eq ride a content digest (:func:`_config_digest`), so stages slot
+    into frozen plans without freezing ``VCGRAConfig``.
+    """
+
+    config: VCGRAConfig
+    out_channel: int = 0
+
+    def __post_init__(self):
+        if self.config.ingest is None:
+            raise ValueError(
+                f"pipeline stage {self.config.app_name!r} has no ingest "
+                "plan (a channel is neither a stencil tap nor a const); "
+                "every stage must eat a raw frame"
+            )
+        object.__setattr__(self, "out_channel", int(self.out_channel))
+        if not 0 <= self.out_channel < len(self.config.out_sel):
+            raise ValueError(
+                f"out_channel={self.out_channel} out of range for "
+                f"{self.config.app_name!r} ({len(self.config.out_sel)} "
+                "output channels)"
+            )
+        object.__setattr__(
+            self,
+            "_digest",
+            hashlib.sha1(
+                f"{_config_digest(self.config)}|out{self.out_channel}".encode()
+            ).hexdigest(),
+        )
+
+    @property
+    def digest(self) -> str:
+        return self._digest
+
+    @property
+    def radius(self) -> int:
+        return int(self.config.ingest.radius)
+
+    def at_radius(self, radius: int) -> "PipelineStage":
+        """The same stage re-planned against a different tap-bank radius
+        (see :meth:`IngestPlan.at_radius`).  The returned config's
+        ``cache_key`` is re-suffixed so the fleet's radius-keyed settings
+        banks never alias the original."""
+        if int(radius) == self.radius:
+            return self
+        cfg = dataclasses.replace(
+            self.config, ingest=self.config.ingest.at_radius(radius)
+        )
+        if cfg.cache_key is not None:
+            cfg.cache_key = f"{cfg.cache_key}@r{int(radius)}"
+        return PipelineStage(cfg, self.out_channel)
+
+    def __hash__(self):
+        return hash(self._digest)
+
+    def __eq__(self, other):
+        return (
+            isinstance(other, PipelineStage) and self._digest == other._digest
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PipelineSpec:
+    """A frozen, hashable ordered chain of :class:`PipelineStage`s: the
+    pipeline axis of ONE app slot.  Stage *i*'s selected output channel
+    feeds stage *i+1*'s ingest taps as a raw frame; intermediates never
+    leave the device (no unpack/repack, no host hop).  Linear chains
+    today -- the degenerate DAG; the stage tuple is the topological order
+    a richer DAG would serialize to."""
+
+    stages: Tuple[PipelineStage, ...]
+
+    def __post_init__(self):
+        stages = tuple(self.stages)
+        if not stages:
+            raise ValueError("a pipeline needs at least one stage")
+        gname = stages[0].config.grid_name
+        for s in stages[1:]:
+            if s.config.grid_name != gname:
+                raise ValueError(
+                    "every stage of a pipeline runs on ONE overlay grid "
+                    f"(reconfigured between stages): {s.config.grid_name!r} "
+                    f"!= {gname!r}"
+                )
+        object.__setattr__(self, "stages", stages)
+        h = hashlib.sha1()
+        for s in stages:
+            h.update(s.digest.encode())
+        object.__setattr__(self, "_digest", h.hexdigest())
+
+    @property
+    def depth(self) -> int:
+        return len(self.stages)
+
+    @property
+    def radii(self) -> Tuple[int, ...]:
+        return tuple(s.radius for s in self.stages)
+
+    @property
+    def total_radius(self) -> int:
+        """Sum of stage radii: the total row pad one output pixel's
+        provenance reaches back through the whole chain -- what the Pallas
+        megakernel pads its DMA slabs by."""
+        return sum(self.radii)
+
+    @property
+    def digest(self) -> str:
+        return self._digest
+
+    @staticmethod
+    def chain(
+        configs: Sequence[VCGRAConfig],
+        out_channels: Optional[Sequence[int]] = None,
+    ) -> "PipelineSpec":
+        """Build a linear chain from mapped configs (+ optional per-stage
+        forwarded output channels, default 0)."""
+        cfgs = list(configs)
+        chans = list(out_channels) if out_channels is not None else [0] * len(cfgs)
+        if len(chans) != len(cfgs):
+            raise ValueError(
+                f"{len(chans)} out_channels for {len(cfgs)} stages"
+            )
+        return PipelineSpec(
+            tuple(PipelineStage(c, ch) for c, ch in zip(cfgs, chans))
+        )
+
+    def __hash__(self):
+        return hash(self._digest)
+
+    def __eq__(self, other):
+        return (
+            isinstance(other, PipelineSpec) and self._digest == other._digest
+        )
+
+
+def pipeline_digest(specs: Sequence[PipelineSpec]) -> str:
+    """Combined digest of one dispatch's per-app-slot pipeline specs --
+    the ``pipe{...}`` segment of the plan key."""
+    h = hashlib.sha1()
+    for s in specs:
+        h.update(s.digest.encode())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +308,13 @@ class OverlayPlan:
     mesh: MeshSpec = MeshSpec()
     tile_rows: Union[int, str, None] = None  # fused plans only
     ingest: str = "sync"
+    #: The pipeline axis: one :class:`PipelineSpec` per app slot of the
+    #: batched dispatch (all sharing depth and per-stage radii -- that is
+    #: executable shape; the per-stage *settings* differ per slot).
+    #: Depth-1 "chains" canonicalize to ``pipeline=None`` + the stage's
+    #: radius at construction, so they ARE the existing single-stage
+    #: batched fused plan: same key, same hash, same cache entry.
+    pipeline: Optional[Tuple[PipelineSpec, ...]] = None
     #: Deprecated spelling of ``mesh=MeshSpec(app=k)`` (the pre-2-D bare
     #: device-count kwarg).  Not a field: it maps onto ``mesh`` at
     #: construction, so both spellings are ONE plan and ONE cache entry.
@@ -142,13 +339,62 @@ class OverlayPlan:
             object.__setattr__(self, "mesh", MeshSpec(app=d))
         interpreter.check_backend(self.backend)
         check_ingest(self.ingest)
+        if self.pipeline is not None:
+            specs = tuple(self.pipeline)
+            if not specs or not all(
+                isinstance(s, PipelineSpec) for s in specs
+            ):
+                raise ValueError(
+                    "pipeline must be a non-empty sequence of PipelineSpec "
+                    "(one per app slot)"
+                )
+            ref = specs[0]
+            for s in specs[1:]:
+                if s.radii != ref.radii:
+                    raise ValueError(
+                        "every app slot of a pipeline dispatch must share "
+                        f"the stage structure: radii {s.radii} != {ref.radii} "
+                        "(depth and per-stage radii are executable shape)"
+                    )
+            for s in specs:
+                for st in s.stages:
+                    if st.config.grid_name != self.grid.name:
+                        raise ValueError(
+                            "pipeline stage mapped on grid "
+                            f"{st.config.grid_name!r} cannot run on plan "
+                            f"grid {self.grid.name!r}"
+                        )
+            if not self.batched:
+                raise ValueError(
+                    "a pipeline plan is a batched fused dispatch (single "
+                    "chains run as N=1); set batched=True"
+                )
+            if self.radius is not None:
+                raise ValueError(
+                    "radius is derived from the pipeline's stages; don't "
+                    "pass both"
+                )
+            object.__setattr__(self, "fused", True)
+            if ref.depth == 1:
+                # Depth-1 canonicalization: a single-stage "chain" IS the
+                # existing batched fused plan -- hash, key and cache entry
+                # all land on the pre-pipeline population.
+                object.__setattr__(self, "pipeline", None)
+                object.__setattr__(self, "radius", ref.radii[0])
+            else:
+                object.__setattr__(self, "pipeline", specs)
+                # The plan-level radius of a chain is the max stage radius:
+                # it governs the rows-mesh band floor (every per-stage halo
+                # exchange must stay single-hop).  Full identity lives in
+                # the key's pipe{digest} segment.
+                object.__setattr__(self, "radius", max(ref.radii))
         if self.fused:
             # Canonical key: a fused plan always names its radius.
             object.__setattr__(
                 self, "radius", 1 if self.radius is None else int(self.radius)
             )
-            if self.radius < 1:
-                raise ValueError(f"fused plan needs radius >= 1, got {self.radius}")
+            if self.radius < 0:
+                raise ValueError(f"fused plan needs radius >= 0, got {self.radius}")
         elif self.radius is not None:
             raise ValueError(
                 f"radius={self.radius} is meaningless for an unfused plan "
@@ -195,6 +441,10 @@ class OverlayPlan:
             self.backend,
             f"dev{self.mesh.app}",
         ]
+        if self.pipeline is not None:
+            # Depth>1 only (depth-1 canonicalized to pipeline=None), so
+            # every pre-pipeline key -- and its cache entry -- survives.
+            parts.append(f"pipe{pipeline_digest(self.pipeline)[:12]}")
         if self.mesh.rows > 1:
             parts.append(f"rows{self.mesh.rows}")
         if self.tile_rows is not None:
@@ -213,6 +463,18 @@ class OverlayExecutable:
       batched=False, fused=True    fn(config_arrays, ingest_arrays, image)
       batched=True,  fused=False   fn(stacked_configs, xs)
       batched=True,  fused=True    fn(stacked_configs, stacked_ingests, images)
+      pipeline (depth > 1)         fn(stage_settings, hw, images)
+
+    Pipeline operands: ``stage_settings`` is one ``(stacked_configs,
+    stacked_ingests, out_ch)`` triple per stage (``out_ch`` int32 [N]);
+    ``hw`` is int32 [N, 2] of per-app true ``(rows, cols)`` inside the
+    (possibly bucketed) canvas -- everything outside is zeroed between
+    stages so the fused chain matches the staged oracle bitwise.  The
+    single-device XLA executor is *specialized at trace time* from the
+    plan's static configs and ignores the settings operands (the plan is
+    the source of truth -- callers must pass settings matching it, which
+    the fleet does by construction); mesh-sharded and Pallas executors
+    consume them as runtime data.  One signature either way.
 
     ``mesh`` is the device mesh the dispatch is sharded over (1-D for
     app-only specs, 2-D for row-banded ones), or None for the
@@ -301,6 +563,200 @@ def _xla_batched_fused(plan: OverlayPlan) -> Callable:
     return partial(interpreter.batched_fused_overlay_step, plan.grid, plan.radius)
 
 
+# -- pipeline executors --------------------------------------------------------
+
+
+class _BankChannels:
+    """Duck-typed ``[C, pixels]`` channel input for
+    :func:`repro.core.specialize.build_specialized_fn`: channels are
+    produced lazily from ONE app's tap bank by the stage's *static*
+    ingest plan, so only channels the specialized trace actually fetches
+    are ever formed -- dead taps cost nothing, exactly like the dead
+    functional units the specializer already folds away."""
+
+    def __init__(self, bank: jnp.ndarray, ingest, dtype):
+        self._bank = bank            # [T+1, pixels]
+        self._ingest = ingest
+        self.shape = (int(ingest.tap_sel.shape[0]),) + bank.shape[1:]
+        self.dtype = dtype
+
+    def __getitem__(self, c: int) -> jnp.ndarray:
+        t = int(self._ingest.tap_sel[c])
+        if t == self._ingest.zero_row:
+            # Const (or zero-pad) channel: a scalar; apply_op broadcasting
+            # and the specializer's final broadcast_to widen it.
+            return jnp.asarray(self._ingest.const_vals[c], self.dtype)
+        return self._bank[t]
+
+
+def _pipeline_specialized_fn(plan: "OverlayPlan") -> Callable:
+    """Single-device XLA pipeline executor, specialized at trace time.
+
+    The plan's :class:`PipelineSpec`s are static, so each (app, stage)
+    pair traces through ``specialize.build_specialized_fn``: only the
+    configured functional unit per PE is emitted (no all-units-plus-mux
+    generic datapath) and every VC select folds to direct SSA wiring --
+    the paper's parameterized-vs-conventional distinction, applied per
+    stage of the chain.  This is where the pipeline bench's speedup over
+    the staged generic dispatches comes from; the inter-stage hop is just
+    a reshape + mask, never a host transfer.
+
+    Bitwise equal to the generic path: per live PE both compute the same
+    ``apply_op`` formula on the same operands, and channel production
+    selects the same bank rows / consts.
+    """
+    from repro.core.specialize import build_specialized_fn
+
+    grid = plan.grid
+    specs = plan.pipeline
+    radii = specs[0].radii
+    depth = len(radii)
+    stage_fns = [
+        [build_specialized_fn(grid, spec.stages[si].config) for spec in specs]
+        for si in range(depth)
+    ]
+
+    def fn(stage_settings, hw, images):
+        del stage_settings  # identity lives in the plan (trace-time consts)
+        x = jnp.asarray(images, grid.dtype)
+        n, H, W = x.shape
+        if n != len(specs):
+            raise ValueError(
+                f"pipeline plan carries {len(specs)} app slots, dispatch "
+                f"has {n} frames"
+            )
+        valid = interpreter.valid_pixel_mask(hw, H, W)
+        ys = None
+        for si in range(depth):
+            bank = interpreter.form_tap_bank(x, radii[si], grid.dtype)
+            ys = jnp.stack(
+                [
+                    stage_fns[si][a](
+                        _BankChannels(
+                            bank[a], specs[a].stages[si].config.ingest,
+                            grid.dtype,
+                        )
+                    )
+                    for a in range(n)
+                ],
+                axis=0,
+            )
+            if si < depth - 1:
+                # out_channel is static per app slot: a plain view, no
+                # gather.
+                y = jnp.stack(
+                    [ys[a, specs[a].stages[si].out_channel] for a in range(n)],
+                    axis=0,
+                )
+                x = jnp.where(valid, y.reshape(n, H, W), 0)
+        return ys
+
+    return fn
+
+
+def _pipeline_stage_fn(plan: "OverlayPlan") -> Callable:
+    """Per-stage executor ``stage_fn(radius, configs, ingests, x)`` for the
+    operand-settings pipeline chain (mesh-sharded paths: SPMD traces once,
+    so per-shard trace-time constants are impossible and settings stay
+    runtime data, exactly like single-stage sharded dispatch)."""
+    if plan.backend == "pallas":
+        from repro.kernels.vcgra.ops import pallas_pipeline_stage_fn
+
+        return pallas_pipeline_stage_fn(plan.grid, plan.tile_rows)
+    if plan.tile_rows is not None:
+        def stage(radius, configs, ingests, x):
+            return interpreter.tiled_batched_fused_overlay_step(
+                plan.grid, radius, plan.tile_rows, configs, ingests, x
+            )
+
+        return stage
+
+    def stage(radius, configs, ingests, x):
+        return interpreter.batched_fused_overlay_step(
+            plan.grid, radius, configs, ingests, x
+        )
+
+    return stage
+
+
+def _with_pipeline_mesh_padding(fn: Callable, spec: MeshSpec,
+                                radius: int) -> Callable:
+    """:func:`_with_mesh_padding` for the pipeline signature
+    ``(stage_settings, hw, images)``: pad the app axis of every settings
+    leaf (replaying the last slot) and the frame rows to ``row_band(H,
+    rows, max_radius) * rows`` zeros, slice both back off.  ``hw`` keeps
+    the true per-app sizes, so the in-chain mask also zeroes the pad rows
+    between stages -- which is what makes replay-padding exact for chains
+    (the padded slots' garbage never crosses a halo exchange)."""
+    app, rows = spec.app, spec.rows
+
+    def padded(stage_settings, hw, images):
+        n, H, W = images.shape
+        pad_n = (-n) % app
+        if pad_n:
+            stage_settings, hw, images = jax.tree_util.tree_map(
+                lambda a: jnp.concatenate(
+                    [a, jnp.broadcast_to(a[-1:], (pad_n,) + a.shape[1:])],
+                    axis=0,
+                ),
+                (stage_settings, hw, images),
+            )
+        band = row_band(H, rows, radius)
+        pad_h = band * rows - H
+        if pad_h:
+            images = jnp.pad(images, ((0, 0), (0, pad_h), (0, 0)))
+        ys = fn(stage_settings, hw, images)
+        if pad_h:
+            ys = ys.reshape(ys.shape[0], ys.shape[1], band * rows, W)
+            ys = ys[:, :, :H, :].reshape(ys.shape[0], ys.shape[1], H * W)
+        return ys[:n] if pad_n else ys
+
+    return padded
+
+
+def _compile_pipeline(plan: "OverlayPlan") -> "OverlayExecutable":
+    """Compile a depth>1 pipeline plan into ONE executable
+    ``fn(stage_settings, hw, images)`` whose intermediates never leave the
+    device.
+
+    Single-device XLA: the trace-time-specialized chain
+    (:func:`_pipeline_specialized_fn`).  Single-device Pallas: the
+    multi-stage megakernel (stage loop over the same VMEM scratch slabs,
+    total pad = sum of stage radii).  Mesh-sharded (either backend): the
+    operand-settings chain, app-sharded via ``shard_apps`` or row-banded
+    with per-stage halo exchange via ``shard_pipeline_rows``.  All paths
+    are bitwise equal to the staged per-stage oracle.
+    """
+    radii = plan.pipeline[0].radii
+    mesh = build_mesh(plan.mesh) if plan.mesh.size > 1 else None
+    if mesh is None:
+        if plan.backend == "pallas":
+            from repro.kernels.vcgra.ops import pallas_pipeline_fn
+
+            fn = pallas_pipeline_fn(plan.grid, radii, plan.tile_rows)
+        else:
+            fn = _pipeline_specialized_fn(plan)
+    else:
+        stage_fn = _pipeline_stage_fn(plan)
+        if plan.mesh.rows > 1:
+            fn = _with_pipeline_mesh_padding(
+                shard_pipeline_rows(stage_fn, mesh, radii),
+                plan.mesh, plan.radius,
+            )
+        else:
+            chain = partial(
+                interpreter.pipeline_batched_fused_step,
+                plan.grid, radii, stage_fn,
+            )
+            fn = _with_app_padding(shard_apps(chain, mesh, 3), plan.mesh.app)
+    donate = ()
+    if plan.ingest == "async" and jax.default_backend() != "cpu":
+        donate = (2,)
+        _install_donation_warning_filter()
+    return OverlayExecutable(plan, jax.jit(fn, donate_argnums=donate),
+                             mesh=mesh)
+
+
 # -- the compile pipeline ------------------------------------------------------
 
 
@@ -377,6 +833,8 @@ def compile_plan(plan: OverlayPlan) -> OverlayExecutable:
     app sharding via ``shard_apps``, 2-D app x rows sharding with seam
     halo exchange via ``shard_apps_rows``), and jits exactly once.
     """
+    if plan.pipeline is not None:
+        return _compile_pipeline(plan)
     if plan.backend == "pallas":
         # Importing the kernel package registers its plan executors.
         import repro.kernels.vcgra.ops  # noqa: F401

@@ -28,6 +28,7 @@ from repro.kernels.vcgra.vcgra_kernel import (
     vcgra_batched,
     vcgra_conventional,
     vcgra_fused_batched,
+    vcgra_pipeline_batched,
     vcgra_specialized,
 )
 
@@ -114,6 +115,57 @@ def make_batched_fused_pallas_fn(grid: GridSpec, radius: int = 1,
                                  interpret=None, tile_rows=None):
     """Jit-once standalone form of :func:`_batched_fused_pallas_fn`."""
     return jax.jit(_batched_fused_pallas_fn(grid, radius, interpret, tile_rows))
+
+
+def pallas_pipeline_fn(grid: GridSpec, radii, tile_rows=None, interpret=None):
+    """Unjitted pipeline-chain megakernel executor for ``compile_plan``
+    (single-device pipeline plans, backend="pallas").
+
+    Signature twin of the XLA pipeline executors:
+    ``fn(stage_settings, hw, images) -> ys`` where ``stage_settings`` is a
+    tuple over stages of ``(stacked_configs, stacked_ingests, out_ch)``
+    exactly as the plan layer stacks them.  Each stage's interpreter-style
+    settings are dense-packed (:func:`pack_settings_batched`) and stacked
+    along a leading stage axis so the whole chain rides one
+    scalar-prefetch bank set into :func:`vcgra_pipeline_batched`.
+    """
+    radii = tuple(int(r) for r in radii)
+
+    def fn(stage_settings, hw, images):
+        ops_s, sel_s, outsel_s, tap_s, const_s, outch_s = [], [], [], [], [], []
+        for configs, ingests, out_ch in stage_settings:
+            ops_arr, sel_arr, out_sel = pack_settings_batched(grid, configs)
+            ops_s.append(ops_arr)
+            sel_s.append(sel_arr)
+            outsel_s.append(out_sel)
+            tap_s.append(jnp.asarray(ingests[0], jnp.int32))
+            const_s.append(jnp.asarray(ingests[1], grid.dtype))
+            outch_s.append(jnp.asarray(out_ch, jnp.int32))
+        return vcgra_pipeline_batched(
+            grid, radii,
+            (jnp.stack(ops_s), jnp.stack(sel_s), jnp.stack(outsel_s)),
+            (jnp.stack(tap_s), jnp.stack(const_s)),
+            jnp.stack(outch_s), hw, images,
+            interpret=interpret, tile_rows=tile_rows,
+        )
+
+    return fn
+
+
+def pallas_pipeline_stage_fn(grid: GridSpec, tile_rows=None, interpret=None):
+    """Per-stage pallas executor ``stage_fn(radius, configs, ingests, x)``
+    for the mesh-sharded pipeline chain drivers (``parallel/axes.py``):
+    each stage runs the single-stage fused megakernel on its shard band,
+    with the generic driver owning inter-stage halo exchange and masking.
+    (Under shard_map the stage loop cannot fold into one kernel -- halo
+    rows live on neighbor devices between stages.)"""
+
+    def stage_fn(radius, stacked_configs, stacked_ingests, images):
+        return _batched_fused_pallas_fn(
+            grid, int(radius), interpret, tile_rows
+        )(stacked_configs, stacked_ingests, images)
+
+    return stage_fn
 
 
 def _batched_pallas_fn(grid: GridSpec, block_n: int = LANE, interpret=None):

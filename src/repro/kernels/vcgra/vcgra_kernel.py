@@ -452,3 +452,194 @@ def vcgra_fused_batched(
         interpret=interpret,
     )(tap_sel, ops_arr, sel_arr, out_sel, const_vals, frames)
     return y[:, :, : H * W] if Hp != H else y
+
+
+# -- multi-stage pipeline megakernel -------------------------------------------
+#
+# The device-resident chain executor (``core/plan.py`` pipeline axis): a
+# depth-S application chain runs as ONE pallas_call whose per-(app, tile)
+# instance executes every stage back to back over the same VMEM slab --
+# the PR 7 DMA pipeline amortizes across the whole chain instead of
+# paying one HBM round trip per stage.
+
+
+def _pipeline_batched_body(
+    grid: GridSpec, radii: Tuple[int, ...], tile_rows: int,
+    tap_ref, op_ref, sel_ref, outsel_ref, outch_ref, hw_ref,
+    const_ref, frames_ref, o_ref, slabs_ref, dma_sems_ref,
+):
+    """Multi-stage trapezoid body: one haloed slab -> final-stage outputs.
+
+    The DMA schedule is exactly ``_fused_batched_body``'s double buffer,
+    but the halo radius is the chain's TOTAL ``R = sum(radii)``: to emit
+    ``tile_rows`` final rows, stage 0 must consume ``tile_rows + 2R`` input
+    rows, and each stage shaves its own ``2 * r_i`` -- a trapezoid of
+    working regions narrowing toward the output tile.  Stage *i* therefore
+    computes ``tile_rows + 2 * reach_i`` rows where ``reach_i`` is the sum
+    of the *downstream* radii (rows later stages still need as halo).
+
+    Between stages the selected output channel (``outch_ref``, a runtime
+    setting like every mux select) is re-masked against the app's true
+    frame extent (``hw_ref``): slab rows outside ``[0, h)`` and columns
+    outside ``[0, w)`` are canvas/halo padding whose *stage outputs* are
+    generally nonzero (a threshold PE emits GT(0, c) there), but the next
+    stage's line buffers must read zeros -- the same invariant the XLA
+    chain keeps with ``interpreter.valid_pixel_mask``, which is what makes
+    fused-vs-staged bitwise parity hold.  The global row of local row
+    ``j`` in stage *i*'s output region is ``t * tile_rows - reach_i + j``.
+
+    Settings banks carry a leading stage axis (``[S, N, ...]``; the
+    ``(si, i)`` SMEM index prefix reuses the shared ``_level_pipeline`` /
+    ``_gather_outputs`` helpers), so one compiled kernel serves every
+    depth-S chain on the grid -- the settings-register contract at chain
+    scale.  The final stage writes straight to the output block, unmasked,
+    like the single-stage kernel (callers slice the canvas).
+    """
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+    step = i * n_tiles + t
+    slot = jax.lax.rem(step, 2)
+    R = sum(radii)
+    tr = tile_rows
+
+    def slab_dma(slot, app, tile):
+        return pltpu.make_async_copy(
+            frames_ref.at[app, pl.ds(tile * tr, tr + 2 * R), :],
+            slabs_ref.at[slot],
+            dma_sems_ref.at[slot],
+        )
+
+    @pl.when(step == 0)
+    def _():
+        slab_dma(0, 0, 0).start()
+
+    next_t = jax.lax.rem(t + 1, n_tiles)
+    next_i = i + jax.lax.div(t + 1, n_tiles)
+
+    @pl.when(step + 1 < pl.num_programs(0) * n_tiles)
+    def _():
+        slab_dma(1 - slot, next_i, next_t).start()
+
+    slab_dma(slot, i, t).wait()
+    x = slabs_ref[slot]                  # [tile_rows + 2R, W] haloed rows
+    W = x.shape[1]
+    dtype = x.dtype
+    for si, r in enumerate(radii):       # chain static; settings runtime
+        reach = sum(radii[si + 1:])
+        h_out = tr + 2 * reach
+        padded = jnp.pad(x, ((0, 0), (r, r)))   # columns only
+        taps = [
+            padded[r + dj : r + dj + h_out, r + di : r + di + W].reshape(
+                h_out * W
+            )
+            for dj, di in tap_offsets(r)
+        ]
+        taps.append(jnp.zeros((h_out * W,), dtype))
+        bank = jnp.stack(taps, axis=0)
+        zero_row = len(taps) - 1
+        consts = const_ref[si, 0]        # [C] in grid dtype
+        chans = []
+        for c in range(grid.num_inputs):
+            tap = tap_ref[si, i, c]
+            row = jax.lax.dynamic_index_in_dim(bank, tap, 0, keepdims=False)
+            chans.append(jnp.where(tap == zero_row, consts[c], row))
+        xc = jnp.stack(chans, axis=0)    # [C, h_out*W] stage channels
+        prev = _level_pipeline(grid, (si, i), op_ref, sel_ref, xc)
+        if si == len(radii) - 1:
+            o_ref[0] = _gather_outputs(grid, (si, i), outsel_ref, prev, dtype)
+        else:
+            y = jax.lax.dynamic_index_in_dim(
+                prev, outch_ref[si, i], 0, keepdims=False
+            ).reshape(h_out, W).astype(dtype)
+            grow = (t * tr - reach) + jax.lax.broadcasted_iota(
+                jnp.int32, (h_out, W), 0
+            )
+            gcol = jax.lax.broadcasted_iota(jnp.int32, (h_out, W), 1)
+            valid = jnp.logical_and(
+                jnp.logical_and(grow >= 0, grow < hw_ref[i, 0]),
+                gcol < hw_ref[i, 1],
+            )
+            x = jnp.where(valid, y, jnp.zeros_like(y))
+
+
+def vcgra_pipeline_batched(
+    grid: GridSpec,
+    radii: Tuple[int, ...],
+    settings: Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    ingests: Tuple[jnp.ndarray, jnp.ndarray],
+    out_chs: jnp.ndarray,
+    hw: jnp.ndarray,
+    images: jnp.ndarray,
+    interpret: Optional[bool] = None,
+    tile_rows=None,
+) -> jnp.ndarray:
+    """Depth-S pipeline megakernel: N chained tenants, ONE pallas_call --
+    the Pallas twin of the plan layer's fused pipeline executors.
+
+    ``settings``: stage-stacked dense banks (ops [S, N, L, max_w], sel
+    [S, N, L, max_w, 2], out_sel [S, N, K]); ``ingests``: per-stage tap
+    plans (tap_sel int32 [S, N, C], const_vals [S, N, C] in grid dtype;
+    stage *i*'s selects index a radius-``radii[i]`` bank); ``out_chs``:
+    int32 [S, N], the channel stage *i* feeds forward (the last stage's
+    row is carried for shape uniformity but never read); ``hw``: int32
+    [N, 2] true (rows, cols) of each app's frame inside the canvas;
+    ``images``: [N, H, W].  Returns [N, num_outputs, H*W] in grid dtype.
+
+    The frame stack is zero-row-padded by the chain's TOTAL radius
+    ``R = sum(radii)`` and stays in HBM; each (app, row-tile) step DMAs
+    one ``[tile_rows + 2R, W]`` window into the 2-slot VMEM double buffer
+    and runs the whole stage trapezoid on it (see
+    ``_pipeline_batched_body``), so every frame row crosses HBM->VMEM
+    once *per chain*, not once per stage.
+    """
+    interpret = _resolve_interpret(interpret)
+    radii = tuple(int(r) for r in radii)
+    ops_arr, sel_arr, out_sel = settings
+    tap_sel, const_vals = ingests
+    images = jnp.asarray(images, grid.dtype)
+    n_apps, H, W = images.shape
+    R = sum(radii)
+    tr = resolve_tile_rows(tile_rows, H, W, R, grid,
+                           lane_align=None if interpret else LANE)
+    n_tiles = num_row_tiles(H, tr)
+    Hp = n_tiles * tr
+    assert interpret or (tr * W) % LANE == 0, (
+        f"compiled pipeline megakernel needs a lane-aligned pixel block: "
+        f"tile_rows*W={tr}*{W}={tr * W} is not a multiple of {LANE}; pad "
+        f"the canvas (the fleet's pow-2 bucketing does), pick another "
+        f"tile_rows, or pass interpret=True"
+    )
+    frames = jnp.pad(images, ((0, 0), (R, Hp - H + R), (0, 0)))
+    n_stages = len(radii)
+    body = functools.partial(_pipeline_batched_body, grid, radii, tr)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,   # tap_sel, ops, sel, out_sel, out_ch, hw
+        grid=(n_apps, n_tiles),
+        in_specs=[
+            pl.BlockSpec(
+                (n_stages, 1, grid.num_inputs), lambda i, t, *_: (0, i, 0)
+            ),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, grid.num_outputs, tr * W), lambda i, t, *_: (i, 0, t)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((2, tr + 2 * R, W), images.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    y = pl.pallas_call(
+        body,
+        out_shape=jax.ShapeDtypeStruct(
+            (n_apps, grid.num_outputs, Hp * W), images.dtype
+        ),
+        grid_spec=grid_spec,
+        interpret=interpret,
+    )(
+        jnp.asarray(tap_sel, jnp.int32), ops_arr, sel_arr, out_sel,
+        jnp.asarray(out_chs, jnp.int32), jnp.asarray(hw, jnp.int32),
+        const_vals, frames,
+    )
+    return y[:, :, : H * W] if Hp != H else y

@@ -275,6 +275,82 @@ def shard_apps_rows(fn: Callable, mesh: Mesh, radius: int,
     return constrained
 
 
+def shard_pipeline_rows(stage_fn, mesh: Mesh, radii,
+                        app_axis: str = APP_AXIS,
+                        row_axis: str = ROW_AXIS) -> Callable:
+    """Row-band sharding for PIPELINE plans: the 2-D mesh twin of
+    :func:`shard_apps_rows` with a per-stage seam halo exchange *between*
+    stages, so a whole chain's intermediates never leave their shard.
+
+    Each stage re-runs :func:`halo_exchange_rows` at its own radius on the
+    current band (the chain's intermediate), executes the unchanged
+    batched fused stage on the haloed slab, crops the synthetic-border
+    rows back off, then zeroes everything outside each app's true frame
+    region (``hw``) before feeding the next stage -- without the mask,
+    stage outputs on canvas/band padding (nonzero: their taps read real
+    rows) would poison the next stage's border, which the staged oracle
+    reads as zeros.  The mask needs each band row's GLOBAL row index,
+    recovered from ``axis_index(rows) * band``.  Callers pad H to
+    ``band * rows`` with ``band >= max(radii)`` first
+    (``plan._with_pipeline_mesh_padding``) so every exchange is
+    single-hop.
+
+    Operands: ``(stage_settings, hw, images)`` -- per-stage
+    ``(configs, ingests, out_ch)`` triples plus the int32 ``[N, 2]``
+    valid-region sizes, all leaves leading with N.
+    """
+    rows = mesh.shape[row_axis]
+    depth = len(radii)
+
+    def banded(stage_settings, hw, slab):
+        n, band, W = slab.shape
+        row0 = jax.lax.axis_index(row_axis) * band
+        rows_in = (
+            (row0 + jnp.arange(band, dtype=jnp.int32))[None, :, None]
+            < hw[:, 0][:, None, None]
+        )
+        cols_in = (
+            jnp.arange(W, dtype=jnp.int32)[None, None, :]
+            < hw[:, 1][:, None, None]
+        )
+        valid = jnp.logical_and(rows_in, cols_in)
+        x = slab
+        ys = None
+        for si, r in enumerate(radii):
+            r = int(r)
+            haloed = halo_exchange_rows(x, r, rows, axis=row_axis)
+            ys = stage_fn(r, stage_settings[si][0], stage_settings[si][1],
+                          haloed)
+            ys = ys.reshape(n, -1, band + 2 * r, W)[:, :, r:r + band, :]
+            if si < depth - 1:
+                out_ch = stage_settings[si][2]
+                y = jnp.take_along_axis(
+                    ys, out_ch.astype(jnp.int32)[:, None, None, None], axis=1
+                )[:, 0]
+                x = jnp.where(valid, y, 0)
+        return ys.reshape(n, ys.shape[1], band * W)
+
+    sharded = _shard_map_impl()(
+        banded, mesh=mesh,
+        in_specs=(P(app_axis), P(app_axis), P(app_axis, row_axis)),
+        out_specs=P(app_axis, None, row_axis),
+    )
+    replicated = NamedSharding(mesh, P())
+
+    def constrained(stage_settings, hw, images):
+        # Same jax-0.4.37 partitioner workaround as shard_apps_rows: pin
+        # the KB-scale settings banks (incl. hw) fully replicated so the
+        # boundary reshard into the partially-replicated in_spec is a
+        # plain local slice, not a miscompiled cross-row sum.
+        stage_settings, hw = jax.tree_util.tree_map(
+            lambda a: jax.lax.with_sharding_constraint(a, replicated),
+            (stage_settings, hw),
+        )
+        return sharded(stage_settings, hw, images)
+
+    return constrained
+
+
 def constrain_time_mixer(x):
     """Batch-split a recurrent mixer's input over EVERY divisible mesh axis.
 

@@ -70,7 +70,9 @@ from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
 from repro.core.ingest import IngestPlan, ReadinessProbe, check_ingest
 from repro.core.pixie import map_app
-from repro.core.plan import OverlayExecutable, OverlayPlan, compile_plan
+from repro.core.plan import (
+    OverlayExecutable, OverlayPlan, PipelineSpec, compile_plan,
+)
 from repro.core.tiling import (
     TILE_AUTO, check_tile_rows, pow2_bucket, round_up, row_band,
 )
@@ -126,12 +128,22 @@ class FleetRequest:
     ``inputs``: named memory-VC channels, or ``image``: an [H, W] array fed
     through the stencil line-buffer helper.  ``grid`` overrides the fleet's
     default overlay for this request.
+
+    ``pipeline`` (instead of ``app``): an ordered chain of applications --
+    stage i's selected output (``out_channels[i]``, default channel 0)
+    feeds stage i+1's ingest taps.  The whole chain executes as ONE
+    device-resident dispatch (a pipeline :class:`OverlayPlan`); a
+    single-stage chain demotes to the plain fused path at submit, so it
+    batches (and caches) exactly like an ``app=`` request.  Pipeline
+    requests take ``image=`` frames only (every stage is fused ingest).
     """
 
-    app: Union[DFG, VCGRAConfig, str]
+    app: Union[DFG, VCGRAConfig, str, None] = None
     inputs: Optional[Dict[str, Any]] = None
     image: Optional[Any] = None
     grid: Optional[GridSpec] = None
+    pipeline: Optional[Sequence[Union[DFG, VCGRAConfig, str]]] = None
+    out_channels: Optional[Sequence[int]] = None
 
 
 @dataclasses.dataclass
@@ -168,6 +180,12 @@ class FleetStats:
     executed: int = 0
     dispatches: int = 0          # batched overlay launches
     fused_dispatches: int = 0    # of which took the fused-ingest path
+    pipeline_dispatches: int = 0  # of which chained depth>1 pipeline specs
+    # Streaming-scheduler preemptions: batches whose composition was
+    # re-sorted mid-selection because an urgent-deadline request flipped
+    # ahead of the staged (priority, arrival) order -- see
+    # StreamingFrontend._select_batch.
+    preempted_batches: int = 0
     # Dispatches launched with fewer real requests than the app tile --
     # the continuous-batching scheduler fires these when a deadline
     # approaches rather than waiting for a full tile, and the serving
@@ -214,9 +232,12 @@ class _Prepared:
 
     grid: GridSpec
     cfg: VCGRAConfig
-    kind: str                    # "image" (fused ingest) | "channels"
+    kind: str          # "image" (fused ingest) | "channels" | "pipeline"
     payload: Any                 # np [H, W] raw frame | jnp [C, batch]
     hw: Optional[Tuple[int, int]]
+    # Depth>1 chain spec for kind="pipeline" (depth-1 chains demote to
+    # kind="image" at submit, so they share the single-stage plan cache).
+    spec: Optional[PipelineSpec] = None
 
 
 class PixieFleet:
@@ -393,12 +414,21 @@ class PixieFleet:
         return cfg
 
     def plan_for_dispatch(self, grid: GridSpec, *, fused: bool,
-                          radius: Optional[int] = None) -> OverlayPlan:
+                          radius: Optional[int] = None,
+                          pipeline: Optional[Tuple[PipelineSpec, ...]] = None,
+                          ) -> OverlayPlan:
         """The :class:`OverlayPlan` of one dispatch on this fleet: the
         fleet contributes its backend, mesh, tiling and ingest axes, the
-        request group contributes grid/fusion/radius.  Unfused dispatches
-        project the mesh to its app axis (pre-packed channels carry no
-        row structure to band-shard)."""
+        request group contributes grid/fusion/radius (or, for chained
+        dispatches, the per-tenant pipeline specs -- radius then derives
+        from the stages).  Unfused dispatches project the mesh to its app
+        axis (pre-packed channels carry no row structure to band-shard)."""
+        if pipeline is not None:
+            return OverlayPlan(
+                grid=grid, batched=True, pipeline=pipeline,
+                backend=self.backend, mesh=self.mesh,
+                tile_rows=self.tile_rows, ingest=self.ingest,
+            )
         return OverlayPlan(
             grid=grid, batched=True, fused=fused, radius=radius,
             backend=self.backend,
@@ -463,7 +493,17 @@ class PixieFleet:
         submitter and can never poison a batch of other tenants' queued
         work.
         """
-        if (request.inputs is None) == (request.image is None):
+        if request.pipeline is not None:
+            if request.app is not None:
+                raise ValueError("give app= or pipeline=, not both")
+            if request.image is None or request.inputs is not None:
+                raise ValueError(
+                    "pipeline requests take image= frames (every stage is "
+                    "fused ingest), not inputs="
+                )
+        elif request.app is None:
+            raise ValueError("exactly one of app= or pipeline= must be given")
+        elif (request.inputs is None) == (request.image is None):
             raise ValueError("exactly one of inputs= or image= must be given")
         prepared = self._prepare(request)
         ticket = self._next_ticket
@@ -681,6 +721,10 @@ class PixieFleet:
     def _prepare(self, request: FleetRequest) -> _Prepared:
         t0 = time.perf_counter()
         grid = request.grid or self.default_grid
+        if request.pipeline is not None:
+            prepared = self._prepare_pipeline(request, grid)
+            self.timings["pack_s"] += time.perf_counter() - t0
+            return prepared
         cfg = self.config_for(request.app, grid)
         if request.image is not None:
             image = np.asarray(request.image)
@@ -708,6 +752,35 @@ class PixieFleet:
         )
         self.timings["pack_s"] += time.perf_counter() - t0
         return prepared
+
+    def _prepare_pipeline(self, request: FleetRequest,
+                          grid: GridSpec) -> _Prepared:
+        """Validate + map a chained request at submit time.  Every stage
+        must carry an ingest plan (the chain is fused ingest end to end);
+        a depth-1 chain demotes to the plain "image" kind so it batches
+        and caches exactly like an ``app=`` request."""
+        chain = list(request.pipeline)
+        if not chain:
+            raise ValueError("pipeline= must name at least one stage")
+        image = np.asarray(request.image)
+        if image.ndim != 2:
+            raise ValueError(f"image must be [H, W], got shape {image.shape}")
+        hw = tuple(image.shape)
+        cfgs = [self.config_for(app, grid) for app in chain]
+        for cfg in cfgs:
+            if cfg.ingest is None:
+                raise ValueError(
+                    f"pipeline stage {cfg.app_name!r} has no ingest plan "
+                    f"(a channel is neither stencil tap nor const); chains "
+                    f"need fused-ingest stages end to end"
+                )
+        spec = PipelineSpec.chain(cfgs, request.out_channels)
+        if spec.depth == 1:
+            # The final stage's out_channel never selects anything (every
+            # executor returns all K output channels), so a depth-1 chain
+            # IS a plain fused request -- same plan key, same caches.
+            return _Prepared(grid, cfgs[0], "image", image, hw)
+        return _Prepared(grid, cfgs[0], "pipeline", image, hw, spec=spec)
 
     def _dispatch_fused(
         self, grid: GridSpec, radius: int,
@@ -781,6 +854,90 @@ class PixieFleet:
         ys = fn(stacked, ingests, frames)
         self.stats.dispatches += 1
         self.stats.fused_dispatches += 1
+        self.stats.stamp_dispatch(fn.plan, f"n{n_tile}x{Hb}x{Wb}")
+        self.stats.executed += n
+        if self.ingest == "async":
+            unpack = self._fused_unpack(tuple(p.hw for _, p in items), Hb, Wb)
+            for (ticket, _), y in zip(items, unpack(ys)):
+                out[ticket] = y
+            self._inflight = ReadinessProbe(ys)
+        else:
+            for i, (ticket, p) in enumerate(items):
+                H, W = p.hw
+                y = np.asarray(ys[i]).reshape((-1, Hb, Wb))[:, :H, :W]
+                out[ticket] = y[0] if y.shape[0] == 1 else y
+        self.timings["dispatch_s"] += time.perf_counter() - t0
+
+    def _dispatch_pipeline(
+        self, grid: GridSpec, radii: Tuple[int, ...],
+        items: List[Tuple[int, _Prepared]], out: Dict[int, np.ndarray],
+    ) -> None:
+        """One chained dispatch: raw frames -> final-stage outputs, every
+        intermediate device-resident.
+
+        Frames embed, bucket and tile exactly like :meth:`_dispatch_fused`
+        (same pow-2 canvas, same app-tile rounding, same async canvas
+        pool/ship/lazy-unpack machinery) -- the chain only changes the
+        executable (a pipeline :class:`OverlayPlan` keyed ``pipe{hash}``)
+        and adds two operands: the per-stage settings banks (stacked per
+        stage through the same bank cache single-stage dispatches use) and
+        the per-app true frame extents ``hw`` that executors use to
+        re-mask intermediates.  Padded app slots replay item 0's chain on
+        a zero frame and are sliced off -- outputs are bitwise identical
+        to per-stage sequential flushes."""
+        t0 = time.perf_counter()
+        n = len(items)
+        n_tile = round_up(n, self._app_tile)
+        specs = [p.spec for _, p in items]
+        specs += [specs[0]] * (n_tile - n)
+        plan = self.plan_for_dispatch(grid, fused=True, pipeline=tuple(specs))
+        fn = self.overlay_executable(plan)
+        Hb = pow2_bucket(max(p.hw[0] for _, p in items), self.min_image_side)
+        Wb = pow2_bucket(max(p.hw[1] for _, p in items), self.min_image_side)
+        if self.mesh.rows > 1:
+            Hb = row_band(Hb, self.mesh.rows, plan.radius) * self.mesh.rows
+        self.stats.padded_app_slots += n_tile - n
+        self.stats.partial_tile_dispatches += 1 if n < n_tile else 0
+
+        stage_settings = []
+        for si in range(len(radii)):
+            stacked, ingests = self._stacked_bank(
+                grid, [s.stages[si].config for s in specs], fused=True
+            )
+            out_ch = jnp.asarray(
+                [s.stages[si].out_channel for s in specs], jnp.int32
+            )
+            stage_settings.append((stacked, ingests, out_ch))
+        stage_settings = tuple(stage_settings)
+        hw = np.full((n_tile, 2), (Hb, Wb), np.int32)
+        for i, (_, p) in enumerate(items):
+            hw[i] = p.hw
+        hw = jnp.asarray(hw)
+
+        if self.ingest == "async" and fn.mesh is not None:
+            frames = self._ship_sharded_frames(
+                fn.mesh, n_tile, Hb, Wb, grid.dtype, items
+            )
+        elif self.ingest == "async":
+            entry = self._canvas((n_tile, Hb, Wb), grid.dtype)
+            for i, (_, p) in enumerate(items):
+                H, W = p.hw
+                entry.buf[i, :H, :W] = p.payload
+            frames = jnp.array(entry.buf, copy=True)
+            entry.pending = frames
+        else:
+            entry = self._canvas((n_tile, Hb, Wb), grid.dtype)
+            for i, (_, p) in enumerate(items):
+                H, W = p.hw
+                entry.buf[i, :H, :W] = p.payload
+            frames = jnp.asarray(entry.buf)
+        self._note_overlap(t0)
+        self.timings["pack_s"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ys = fn(stage_settings, hw, frames)
+        self.stats.dispatches += 1
+        self.stats.fused_dispatches += 1
+        self.stats.pipeline_dispatches += 1
         self.stats.stamp_dispatch(fn.plan, f"n{n_tile}x{Hb}x{Wb}")
         self.stats.executed += n
         if self.ingest == "async":
@@ -886,6 +1043,11 @@ class PixieFleet:
         for ticket, p in pending:
             if p.kind == "image":
                 key = (p.grid, "image", p.cfg.ingest.radius)
+            elif p.kind == "pipeline":
+                # Chains batch together when their per-stage radii agree
+                # (depth and radii are executable shape; the specs
+                # themselves ride the plan as per-tenant settings).
+                key = (p.grid, "pipe", p.spec.radii)
             else:
                 key = (p.grid, "channels")
             groups.setdefault(key, []).append((ticket, p))
@@ -896,6 +1058,8 @@ class PixieFleet:
         for key, items in groups.items():
             if key[1] == "image":
                 self._dispatch_fused(key[0], key[2], items, out)
+            elif key[1] == "pipe":
+                self._dispatch_pipeline(key[0], key[2], items, out)
             else:
                 self._dispatch_packed(key[0], items, out)
         self.timings["flush_s"] = time.perf_counter() - t0

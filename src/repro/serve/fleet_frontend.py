@@ -30,7 +30,7 @@ from __future__ import annotations
 import time
 import warnings
 from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -139,21 +139,34 @@ class FleetFrontend(ImageService):
 
     def submit(
         self,
-        app: Union[str, DFG],
+        app: Union[str, DFG, Sequence[Union[str, DFG]]],
         image: np.ndarray,
         grid: Optional[GridSpec] = None,
         **kwargs,
     ) -> JobHandle:
         """Enqueue one frame; returns a :class:`JobHandle` whose
-        ``result()`` drives the flush if it has not happened yet."""
+        ``result()`` drives the flush if it has not happened yet.
+
+        ``app`` may be a list/tuple of stages -- the chain runs as ONE
+        device-resident pipeline dispatch (stage i's output feeds stage
+        i+1's taps; the job is named ``"a+b+c"``)."""
         if kwargs:
             raise TypeError(
                 f"unsupported submit options {sorted(kwargs)}; deadline_s/"
                 f"priority scheduling needs the streaming front-end "
                 f"(repro.serve.StreamingFrontend)"
             )
-        name, work = resolve_app(self.registry, app)
-        ticket = self.fleet.submit(FleetRequest(app=work, image=image, grid=grid))
+        if isinstance(app, (list, tuple)):
+            resolved = [resolve_app(self.registry, a) for a in app]
+            name = "+".join(n for n, _ in resolved)
+            ticket = self.fleet.submit(FleetRequest(
+                pipeline=[w for _, w in resolved], image=image, grid=grid
+            ))
+        else:
+            name, work = resolve_app(self.registry, app)
+            ticket = self.fleet.submit(
+                FleetRequest(app=work, image=image, grid=grid)
+            )
         handle = JobHandle(ticket, name, kick=self.flush)
         self._arrivals[ticket] = (name, time.perf_counter())
         self._handles[ticket] = handle

@@ -81,7 +81,7 @@ class _PendingRequest:
 
     seq: int                      # arrival order (FIFO tiebreak)
     name: str
-    work: Union[str, DFG]
+    work: Union[str, DFG, List]   # a list means a pipeline chain of stages
     image: np.ndarray
     grid: Optional[GridSpec]
     priority: int
@@ -222,7 +222,9 @@ class StreamingFrontend(ImageService):
         scheduler will launch a partial tile rather than let it expire
         waiting for a full one, and :class:`LatencyStats` counts it as a
         miss if total latency still exceeds it.  ``priority`` breaks
-        batching ties (higher is served first).  Raises
+        batching ties (higher is served first).  ``app`` may be a
+        list/tuple of stages -- the chain runs as ONE device-resident
+        pipeline dispatch (job named ``"a+b+c"``).  Raises
         :class:`AdmissionError` when the bounded queue is full.
         """
         if kwargs:
@@ -235,7 +237,12 @@ class StreamingFrontend(ImageService):
         # so obviously-bad requests fail to their submitter immediately;
         # mapping/grid validation happens on the worker and fails the
         # handle instead.
-        name, work = resolve_app(self.registry, app)
+        if isinstance(app, (list, tuple)):
+            resolved = [resolve_app(self.registry, a) for a in app]
+            name = "+".join(n for n, _ in resolved)
+            work: Union[str, DFG, List] = [w for _, w in resolved]
+        else:
+            name, work = resolve_app(self.registry, app)
         image = np.asarray(image)
         if image.ndim != 2:
             raise ValueError(f"image must be [H, W], got shape {image.shape}")
@@ -380,11 +387,33 @@ class StreamingFrontend(ImageService):
         )
 
     def _select_batch(self, pending: List[_PendingRequest]) -> List[_PendingRequest]:
-        """Pop up to ``target_batch`` requests by (priority desc, arrival);
-        the rest stay pending -- continuous batching, not drain-all."""
-        pending.sort(key=lambda p: (-p.priority, p.seq))
+        """Pop up to ``target_batch`` requests; the rest stay pending --
+        continuous batching, not drain-all.
+
+        Staged order is (priority desc, arrival), but an URGENT request --
+        one whose remaining deadline budget no longer covers its
+        population's estimated flush -- preempts the staged set
+        mid-selection: urgency outranks priority, so a low-priority
+        request about to blow its SLO jumps a staged batch of
+        high-priority deadline-less work.  Each preemption that actually
+        changes the launched composition is counted in
+        ``FleetStats.preempted_batches`` (the contention test asserts
+        it)."""
+        now = time.perf_counter()
+        staged = sorted(pending, key=lambda p: (-p.priority, p.seq))
+
+        def urgent(p: _PendingRequest) -> bool:
+            return (
+                p.deadline_at is not None
+                and p.deadline_at - now
+                <= self._estimate(p) + self.deadline_margin_s
+            )
+
+        pending.sort(key=lambda p: (not urgent(p), -p.priority, p.seq))
         batch = pending[: self.target_batch]
         del pending[: self.target_batch]
+        if {p.seq for p in batch} != {p.seq for p in staged[: self.target_batch]}:
+            self.fleet.stats.preempted_batches += 1
         return batch
 
     def _dispatch(self, batch: List[_PendingRequest]) -> None:
@@ -394,9 +423,12 @@ class StreamingFrontend(ImageService):
         tickets: Dict[int, _PendingRequest] = {}
         for p in batch:
             try:
-                t = self.fleet.submit(
-                    FleetRequest(app=p.work, image=p.image, grid=p.grid)
-                )
+                if isinstance(p.work, list):
+                    req = FleetRequest(pipeline=p.work, image=p.image,
+                                       grid=p.grid)
+                else:
+                    req = FleetRequest(app=p.work, image=p.image, grid=p.grid)
+                t = self.fleet.submit(req)
             except Exception as exc:    # noqa: BLE001 -- handed to the handle
                 p.handle._fail(exc)
                 continue

@@ -18,6 +18,10 @@ Three deprecations are pinned here:
   survives only as a DeprecationWarning shim, and nothing in
   production/bench code (including docstrings and error messages, which
   must name the MeshSpec spelling) may use it.
+* PR 9 made chained overlays a plan axis (``PipelineSpec`` -> ONE
+  device-resident executable); production/bench code must never run a
+  chain as a per-stage ``run_image``/``run_raw`` loop with host hops
+  between stages (pass ``pipeline=`` / ``run_pipeline`` instead).
 
 (``tests/`` is exempt: the shim-parity tests call both on purpose.)
 """
@@ -46,6 +50,15 @@ PROTOCOL_CALL = re.compile(r"(?<!np)\.(?:tick|take)\s*\(")
 # never match; ``!=``/``==`` comparisons are excluded by the negative
 # lookahead.
 DEVICES_KWARG = re.compile(r"\bdevices=(?!=)")
+# A staged chain: a loop over stages/pipeline/chain followed (within a
+# few lines) by a per-stage ``run_image``/``run_raw`` call -- the host-hop
+# pattern the pipeline plans replace.  Loops that feed stage outputs to
+# batched/fleet entry points (``run_many``, ``flush``) are the sanctioned
+# staged ORACLES in benchmarks and never match.
+PIPELINE_LOOP_CALL = re.compile(
+    r"for\s+\w+\s+in\s+[^\n]*(?i:stages|pipeline|chain)[^\n]*:"
+    r"\s*\n(?:[^\n]*\n){0,4}?[^\n]*\.run_(?:image|raw)\s*\("
+)
 
 
 def _offenders(pattern) -> list:
@@ -83,4 +96,14 @@ def test_no_bare_devices_kwarg_sites():
         "deprecated bare device-count kwarg used in production/bench "
         "code -- pass mesh=MeshSpec(app=k, rows=m) instead: "
         + ", ".join(offenders)
+    )
+
+
+def test_no_per_stage_run_image_loop_sites():
+    offenders = _offenders(PIPELINE_LOOP_CALL)
+    assert not offenders, (
+        "chained overlay run as a per-stage run_image/run_raw loop in "
+        "production/bench code -- chains are a plan axis: pass "
+        "pipeline= to the fleet / front-ends or call Pixie.run_pipeline "
+        "so intermediates stay on device: " + ", ".join(offenders)
     )

@@ -1,0 +1,108 @@
+"""Property-based pipeline tests (hypothesis): for RANDOM chains -- depth
+1-4, mixed stage radii including re-planned radius-0 pointwise stages,
+ragged non-square multi-app stacks -- the fused device-resident chain is
+BITWISE equal to the staged per-stage oracle (one single-stage fleet
+flush per stage, host hop between), on both backends.
+
+Plan-key compatibility is pinned here too: depth-1 "chains" must hash
+and key identically to the existing single-stage fused plans, so the new
+pipeline axis cannot orphan any pre-pipeline cache entry.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from conftest import shared_app_grid
+
+from repro.core import OverlayPlan, map_app
+from repro.core import applications as apps
+from repro.core.plan import PipelineSpec, PipelineStage
+from repro.runtime.fleet import FleetRequest, PixieFleet
+
+STAGE_NAMES = ["gauss3", "sobel_x", "threshold", "identity", "sharpen"]
+GRID = shared_app_grid(STAGE_NAMES, name="pipe-prop")
+# Pointwise stages (single center tap) re-plan to a radius-0 bank; the
+# mixed-radii chain then pads each stage by ITS radius, not a global one.
+POINTWISE = ("threshold", "identity")
+
+
+def _cfg(name):
+    cfg = map_app(apps.ALL_APPS[name](), GRID)
+    cfg.cache_key = f"{name}@{GRID.name}"  # fleet settings-bank identity
+    return cfg
+
+
+CFGS = {n: _cfg(n) for n in STAGE_NAMES}
+AT0 = {n: PipelineStage(CFGS[n]).at_radius(0).config for n in POINTWISE}
+
+# Module-level fleets: the overlay LRU persists across hypothesis
+# examples, so repeated chain shapes reuse executables (keeps the suite
+# inside tier-1 time); the oracle fleet runs plain single-stage flushes.
+FLEETS = {b: PixieFleet(default_grid=GRID, backend=b)
+          for b in ("xla", "pallas")}
+ORACLE = PixieFleet(default_grid=GRID)
+
+
+@st.composite
+def chain_cases(draw):
+    depth = draw(st.integers(1, 4))
+    cfgs = []
+    for _ in range(depth):
+        name = draw(st.sampled_from(STAGE_NAMES))
+        if name in POINTWISE and draw(st.booleans()):
+            cfgs.append(AT0[name])  # radius-0 stage in the mix
+        else:
+            cfgs.append(CFGS[name])
+    n_apps = draw(st.integers(1, 3))
+    hws = [
+        (draw(st.integers(4, 12)), draw(st.integers(4, 12)))
+        for _ in range(n_apps)
+    ]
+    seed = draw(st.integers(0, 2**31 - 1))
+    return cfgs, hws, seed
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@given(case=chain_cases())
+@settings(max_examples=12, deadline=None)
+def test_random_chains_match_staged_oracle(backend, case):
+    cfgs, hws, seed = case
+    rng = np.random.default_rng(seed)
+    images = [rng.integers(0, 256, hw).astype(np.int32) for hw in hws]
+
+    fused = FLEETS[backend].run_many(
+        [FleetRequest(pipeline=cfgs, image=im) for im in images]
+    )
+    # staged oracle: one single-stage flush per stage, host hop between
+    cur = images
+    for cfg in cfgs:
+        cur = [
+            np.asarray(y)
+            for y in ORACLE.run_many(
+                [FleetRequest(app=cfg, image=c) for c in cur]
+            )
+        ]
+    for got, want in zip(fused, cur):
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@given(case=chain_cases())
+@settings(max_examples=20, deadline=None)
+def test_depth1_chain_plans_hash_like_single_stage_plans(case):
+    """EVERY depth-1 pipeline plan canonicalizes onto the pre-pipeline
+    fused-plan population: equal key, equal hash, no pipe segment."""
+    cfgs, _, _ = case
+    cfg = cfgs[0]
+    spec = PipelineSpec.chain([cfg])
+    p_pipe = OverlayPlan(grid=GRID, batched=True, pipeline=(spec,))
+    p_plain = OverlayPlan(
+        grid=GRID, batched=True, fused=True,
+        radius=int(cfg.ingest.radius),
+    )
+    assert p_pipe.pipeline is None
+    assert p_pipe.key() == p_plain.key()
+    assert p_pipe == p_plain and hash(p_pipe) == hash(p_plain)
+    assert "|pipe" not in p_pipe.key()

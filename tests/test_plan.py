@@ -86,7 +86,10 @@ def test_plan_validation_and_canonicalization():
     with pytest.raises(ValueError, match="radius"):
         OverlayPlan(grid=GRID, fused=False, radius=1)
     with pytest.raises(ValueError, match="radius"):
-        OverlayPlan(grid=GRID, fused=True, radius=0)
+        OverlayPlan(grid=GRID, fused=True, radius=-1)
+    # radius 0 is a VALID fused plan since PR 9: a depth-1 pointwise
+    # pipeline stage (threshold at radius 0) canonicalizes onto it
+    assert OverlayPlan(grid=GRID, fused=True, radius=0).radius == 0
     # fused plans canonicalize a missing radius to 1 (one key per bank)
     assert OverlayPlan(grid=GRID, fused=True).radius == 1
     assert OverlayPlan(grid=GRID, fused=True) == OverlayPlan(

@@ -392,3 +392,32 @@ def test_probe_overlap_accounting_async_fleet(rng):
     assert fleet.stats.ingest_overlap_s >= 0.0
     assert np.isfinite(fleet.stats.ingest_overlap_s)
     assert fleet.stats.canvas_pool_hits >= 1
+
+
+def test_urgent_request_preempts_staged_batch(rng):
+    """An urgent-deadline request preempts a staged higher-priority batch
+    mid-selection: with the worker stopped, two deadline-less
+    high-priority requests stage first; a low-priority request whose
+    deadline cannot survive a second flush (est_flush_s is seeded huge)
+    flips to urgent and must ride the first batch instead -- counted in
+    FleetStats.preempted_batches."""
+    img = rng.integers(0, 256, (8, 8)).astype(np.int32)
+    fleet = PixieFleet(default_grid=sobel_grid(), batch_tile=2)
+    svc = StreamingFrontend(
+        fleet=fleet, target_batch=2, autostart=False,
+        est_flush_s=5.0,  # every pending deadline looks unservable later
+        max_linger_s=0.01,
+    )
+    high = [svc.submit(n, img, priority=10) for n in ["sobel_x", "sharpen"]]
+    urgent = svc.submit("laplace", img, priority=0, deadline_s=0.001)
+    time.sleep(0.01)  # deadline expires relative to est_flush_s regardless
+    svc.start()
+    j_urgent = urgent.job(timeout=WAIT)
+    jobs_high = [h.job(timeout=WAIT) for h in high]
+    svc.close(timeout=WAIT)
+    # the urgent request jumped the staged (priority-sorted) order
+    assert fleet.stats.preempted_batches >= 1
+    assert j_urgent.flush_seq == 0
+    assert max(j.flush_seq for j in jobs_high) >= 1
+    for j in jobs_high:
+        assert j.output is not None
