@@ -1,0 +1,334 @@
+"""Benchmark 8 — chaos soak: fault-injected self-healing serving.
+
+The serving-latency bench measures the happy path; this bench measures
+what the resilience stack (PR 10) delivers when the path is NOT happy.
+An open-loop request trace is replayed against the streaming front-end
+with a seeded :class:`~repro.runtime.chaos.FaultInjector` armed across
+every hook point, and the run is graded against a fault-free ORACLE of
+the same trace:
+
+  faults      * transient dispatch faults against the primary (tiled)
+                plan, enough consecutive failures to OPEN its circuit
+                breaker; the fault then burns out so the recovery phase
+                must observe a half-open probe CLOSE it again
+  (seeded)    * a persistently poisoned tenant (every ``threshold``
+                request): bisection quarantine must isolate EXACTLY
+                those requests, each failing typed, zero collateral
+              * low-rate NaN output corruption: the output guard must
+                catch it and re-dispatch clean, bitwise
+              * low-rate transfer stalls (the straggler source)
+              * one injected worker death: the supervisor must restart
+                the worker thread and strand no handle
+
+  floors      * availability >= 99% over NON-poisoned requests (in a
+    (--check)   seeded smoke run it is 100%: every non-poisoned request
+                is served)
+              * every served output bitwise-equal to the fault-free
+                oracle (self-healing must never change values)
+              * every poisoned request quarantined (raises typed), and
+                ONLY those
+              * zero hung handles: every result(timeout=) resolves
+              * breaker opened AND recovered (close event after open)
+              * the worker restarted at least once
+              * p99 total latency bounded (retries/backoff/stalls cost
+                latency, not correctness -- but not unbounded latency)
+
+Emits a ``BENCH {json}`` line and (``--out``) the JSON artifact CI
+uploads as ``BENCH_chaos.json``.
+
+Usage:
+  python benchmarks/chaos_soak.py                  # full soak
+  python benchmarks/chaos_soak.py --smoke          # CI-sized (<60 s)
+  python benchmarks/chaos_soak.py --smoke --check  # enforce floors
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import sobel_grid
+from repro.runtime.chaos import FaultInjector
+from repro.runtime.fleet import PixieFleet
+from repro.runtime.resilience import (
+    BreakerBoard, JobTimeout, QuarantinedError, RetryPolicy, ServiceError,
+)
+from repro.serve import StreamingFrontend
+
+# The app mix: float PEs so NaN corruption is expressible in the fabric
+# dtype; `threshold` is the poisoned tenant.
+MIX = ["sobel_x", "sobel_y", "sharpen", "laplace", "threshold", "identity"]
+POISONED_APP = "threshold"
+TILE_ROWS = 8            # explicit row tiling => the plan key has a
+                         # "tile:8" token to match faults on, and the
+                         # fallback chain has an untiled sibling
+
+AVAILABILITY_FLOOR = 0.99
+P99_TOTAL_S = 5.0        # generous: backoff sleeps + stalls are latency,
+                         # not failures; this only guards runaway retries
+RESULT_WAIT_S = 300.0    # per-handle bound; a hang is a FINDING, not a
+                         # test timeout
+
+
+def _grid():
+    return sobel_grid(float_pe=True)
+
+
+def _trace(n: int, side: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [
+        (MIX[i % len(MIX)],
+         rng.integers(0, 256, (side, side)).astype(np.float32))
+        for i in range(n)
+    ]
+
+
+def _fleet(faults=None, breakers=None):
+    return PixieFleet(default_grid=_grid(), tile_rows=TILE_ROWS,
+                      faults=faults, breakers=breakers,
+                      retry=RetryPolicy(backoff_base_s=0.002,
+                                        backoff_max_s=0.02))
+
+
+def _injector(seed: int, breaker_threshold: int) -> FaultInjector:
+    return (
+        FaultInjector(seed=seed)
+        # Trip the tiled primary's breaker, then burn out so the
+        # recovery phase can close it via a half-open probe.
+        .inject("dispatch", transient=False, match=("tile:8",),
+                max_fires=breaker_threshold, detail="primary-plan outage")
+        # Persistent poison pill: every threshold request, forever.
+        .inject("dispatch", transient=False, match=(f"<app:{POISONED_APP}>",),
+                detail="poisoned tenant")
+        # Low-rate transient flakiness on everything else.
+        .inject("dispatch", rate=0.05, transient=True)
+        # Low-rate NaN corruption: the output guard must catch it.
+        .inject("nan_output", rate=0.05)
+        # Low-rate stalls: the straggler source HeartbeatMonitor sees.
+        .inject("transfer_stall", rate=0.05, delay_s=0.02)
+        # One worker kill: the supervisor must restart and lose nothing.
+        .inject("worker_death", max_fires=1)
+    )
+
+
+def _replay(trace, rate_hz: float, target_batch: int,
+            faults=None, breakers=None) -> dict:
+    """Open-loop replay; returns per-request outcomes + service stats."""
+    fleet = _fleet(faults=faults, breakers=breakers)
+    outcomes = []
+    with StreamingFrontend(fleet=fleet, target_batch=target_batch,
+                           max_queue=4 * len(trace)) as svc:
+        svc.process(MIX[0], trace[0][1])          # compile outside the clock
+        svc.latency.reset()
+        handles = []
+        t0 = time.perf_counter()
+        for i, (name, img) in enumerate(trace):
+            target = t0 + i / rate_hz
+            delay = target - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            handles.append(svc.submit(name, img))
+        for (name, _), h in zip(trace, handles):
+            try:
+                out = np.asarray(h.result(timeout=RESULT_WAIT_S))
+                outcomes.append((name, "served", out))
+            except QuarantinedError as exc:
+                outcomes.append((name, "quarantined", exc))
+            except JobTimeout as exc:
+                outcomes.append((name, "hung", exc))
+            except ServiceError as exc:
+                outcomes.append((name, "failed", exc))
+        makespan = time.perf_counter() - t0
+        summary = svc.latency.summary()
+        restarts = svc.worker_restarts
+    return {
+        "outcomes": outcomes,
+        "latency": summary,
+        "makespan_s": makespan,
+        "worker_restarts": restarts,
+        "stats": fleet.stats,
+    }
+
+
+def run_soak(n_requests: int, rate_hz: float, side: int, target_batch: int,
+             seed: int) -> dict:
+    trace = _trace(n_requests, side, seed=seed)
+
+    # Fault-free oracle first: the grading key for bitwise comparison.
+    oracle = _replay(trace, rate_hz, target_batch)
+    oracle_outs = [o for _, _, o in oracle["outcomes"]]
+    assert all(kind == "served" for _, kind, _ in oracle["outcomes"])
+
+    # The chaos run: same trace, same arrival schedule, faults armed.
+    breakers = BreakerBoard(failure_threshold=3, cooldown_s=0.3)
+    faults = _injector(seed=seed + 1, breaker_threshold=3)
+    chaos = _replay(trace, rate_hz, target_batch,
+                    faults=faults, breakers=breakers)
+
+    poisoned_total = sum(1 for name, _ in trace if name == POISONED_APP)
+    served = quarantined = hung = failed = mismatched = 0
+    collateral = 0          # non-poisoned requests that did not serve
+    for (name, kind, payload), want in zip(chaos["outcomes"], oracle_outs):
+        if kind == "served":
+            served += 1
+            if not np.array_equal(payload, want):
+                mismatched += 1
+        elif kind == "quarantined":
+            quarantined += 1
+            if name != POISONED_APP:
+                collateral += 1
+        elif kind == "hung":
+            hung += 1
+        else:
+            failed += 1
+    nonpoisoned = n_requests - poisoned_total
+    availability = served / nonpoisoned if nonpoisoned else 1.0
+
+    stats = chaos["stats"]
+    events = [e["event"] for e in stats.breaker_events]
+    opened = sum(1 for e in events if e.startswith(("open:", "reopen:")))
+    closed_after_open = "close" in events and (
+        events.index("close") > next(
+            (i for i, e in enumerate(events) if e.startswith("open:")), -1))
+
+    return {
+        "n_requests": n_requests,
+        "offered_load_req_per_s": rate_hz,
+        "frame": [side, side],
+        "target_batch": target_batch,
+        "seed": seed,
+        "oracle_makespan_s": oracle["makespan_s"],
+        "chaos_makespan_s": chaos["makespan_s"],
+        "served": served,
+        "poisoned_requests": poisoned_total,
+        "quarantined": quarantined,
+        "collateral_quarantines": collateral,
+        "hung_handles": hung,
+        "other_failures": failed,
+        "bitwise_mismatches": mismatched,
+        "availability_nonpoisoned": availability,
+        "worker_restarts": chaos["worker_restarts"],
+        "fault_fires": dict(faults.fired),
+        "fleet": {
+            "dispatches": stats.dispatches,
+            "retries": stats.retries,
+            "fallback_dispatches": stats.fallback_dispatches,
+            "quarantined_requests": stats.quarantined_requests,
+            "guard_failures": stats.guard_failures,
+            "straggler_flushes": stats.straggler_flushes,
+        },
+        "breaker": {
+            "events": events,
+            "opened": opened,
+            "recovered": closed_after_open,
+            "final_states": breakers.states(),
+        },
+        "latency": chaos["latency"],
+    }
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    p.add_argument("--n-requests", type=int, default=None)
+    p.add_argument("--rate", type=float, default=None,
+                   help="offered load in requests/s")
+    p.add_argument("--image", type=int, default=32, help="square frame side")
+    p.add_argument("--target-batch", type=int, default=6)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--out", type=str, default=None, help="write BENCH JSON here")
+    p.add_argument("--check", action="store_true",
+                   help="exit nonzero unless the resilience floors hold "
+                        "(availability, bitwise survivors, exact "
+                        "quarantine, zero hangs, breaker recovery, worker "
+                        "restart, bounded p99)")
+    a = p.parse_args(argv)
+
+    n_requests = a.n_requests or (60 if a.smoke else 240)
+    rate = a.rate or (150.0 if a.smoke else 300.0)
+
+    soak = run_soak(n_requests, rate, a.image, a.target_batch, a.seed)
+
+    result = {
+        "bench": "chaos_soak",
+        "grid": _grid().name,
+        "soak": soak,
+        "floors": {
+            "availability_nonpoisoned": AVAILABILITY_FLOOR,
+            "hung_handles": 0,
+            "bitwise_mismatches": 0,
+            "collateral_quarantines": 0,
+            "p99_total_s": P99_TOTAL_S,
+        },
+    }
+
+    lat = soak["latency"]
+    print(f"chaos soak: {n_requests} requests @ {rate:.0f} req/s offered, "
+          f"{a.image}x{a.image} px, tile {a.target_batch}, seed {a.seed}")
+    print(f"  served     {soak['served']}/{n_requests} "
+          f"(availability {100 * soak['availability_nonpoisoned']:.2f}% of "
+          f"{n_requests - soak['poisoned_requests']} non-poisoned; "
+          f"{soak['bitwise_mismatches']} bitwise mismatch(es))")
+    print(f"  quarantine {soak['quarantined']} of {soak['poisoned_requests']} "
+          f"poisoned ({soak['collateral_quarantines']} collateral), "
+          f"{soak['hung_handles']} hung, {soak['other_failures']} other")
+    print(f"  healing    {soak['fleet']['retries']} retries, "
+          f"{soak['fleet']['fallback_dispatches']} fallback dispatches, "
+          f"{soak['fleet']['guard_failures']} guard catches, "
+          f"{soak['worker_restarts']} worker restart(s)")
+    print(f"  breaker    {soak['breaker']['opened']} open event(s), "
+          f"recovered={soak['breaker']['recovered']}, "
+          f"final={soak['breaker']['final_states']}")
+    print(f"  latency    p50 {1e3 * lat['total_s']['p50']:7.2f} ms   "
+          f"p99 {1e3 * lat['total_s']['p99']:7.2f} ms   "
+          f"max {1e3 * lat['total_s']['max']:7.2f} ms "
+          f"(oracle makespan {soak['oracle_makespan_s']:.2f}s, "
+          f"chaos {soak['chaos_makespan_s']:.2f}s)")
+
+    print("BENCH " + json.dumps(result))
+    if a.out:
+        os.makedirs(os.path.dirname(a.out) or ".", exist_ok=True)
+        with open(a.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {a.out}")
+
+    if a.check:
+        fails = []
+        if soak["availability_nonpoisoned"] < AVAILABILITY_FLOOR:
+            fails.append(
+                f"availability {soak['availability_nonpoisoned']:.4f} < "
+                f"{AVAILABILITY_FLOOR} over non-poisoned requests")
+        if soak["hung_handles"]:
+            fails.append(f"{soak['hung_handles']} hung handle(s)")
+        if soak["bitwise_mismatches"]:
+            fails.append(
+                f"{soak['bitwise_mismatches']} served output(s) differ "
+                f"from the fault-free oracle")
+        if soak["collateral_quarantines"]:
+            fails.append(
+                f"{soak['collateral_quarantines']} non-poisoned request(s) "
+                f"quarantined (bisection collateral)")
+        if soak["quarantined"] < soak["poisoned_requests"]:
+            fails.append(
+                f"only {soak['quarantined']}/{soak['poisoned_requests']} "
+                f"poisoned requests were quarantined")
+        if not soak["breaker"]["opened"]:
+            fails.append("the primary plan's breaker never opened")
+        if not soak["breaker"]["recovered"]:
+            fails.append("the breaker never recovered (no close after open)")
+        if soak["worker_restarts"] < 1:
+            fails.append("the injected worker death caused no restart")
+        p99 = lat["total_s"]["p99"]
+        if p99 > P99_TOTAL_S:
+            fails.append(f"p99 total {p99:.3f}s > {P99_TOTAL_S}s floor")
+        if fails:
+            raise SystemExit("FAIL: " + "; ".join(fails))
+    return result
+
+
+if __name__ == "__main__":
+    main()

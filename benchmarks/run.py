@@ -7,6 +7,7 @@
   fleet_throughput   multi-tenant batched overlay vs sequential dispatch
   serving_latency    streaming front-end latency percentiles at offered load
   pipeline_throughput  device-resident fused chains vs staged per-stage flushes
+  chaos_soak         fault-injected self-healing serving vs a fault-free oracle
 
 Prints ``name,us_per_call,derived`` CSV rows at the end for machine
 consumption, after the human-readable tables.
@@ -30,6 +31,7 @@ import traceback
 
 BENCH_FLEET_JSON = "artifacts/bench/BENCH_fleet.json"
 BENCH_SERVING_JSON = "artifacts/bench/BENCH_serving.json"
+BENCH_CHAOS_JSON = "artifacts/bench/BENCH_chaos.json"
 
 
 def main(argv=None) -> None:
@@ -188,6 +190,30 @@ def main(argv=None) -> None:
     except (Exception, SystemExit) as e:
         traceback.print_exc()
         failures.append(("pipeline_throughput", e))
+
+    print()
+    print("=" * 72)
+    print("Benchmark 8: chaos soak (fault-injected self-healing serving)")
+    print("=" * 72)
+    try:
+        from benchmarks import chaos_soak
+
+        chaos_args = ["--smoke"]
+        if args.check:
+            chaos_args += ["--check", "--out", BENCH_CHAOS_JSON]
+        r = chaos_soak.main(chaos_args)
+        s = r["soak"]
+        csv_rows.append((
+            "chaos/availability",
+            f"{1e6 * s['latency']['total_s']['p99']:.1f}",
+            f"availability={s['availability_nonpoisoned']:.4f};"
+            f"quarantined={s['quarantined']};hung={s['hung_handles']};"
+            f"restarts={s['worker_restarts']};"
+            f"breaker_recovered={s['breaker']['recovered']}",
+        ))
+    except (Exception, SystemExit) as e:
+        traceback.print_exc()
+        failures.append(("chaos_soak", e))
 
     print()
     print("name,us_per_call,derived")

@@ -7,7 +7,9 @@ different applications, different frame sizes — served by one compiled
 overlay executable via the batched fleet runtime, behind the futures
 service API (``submit`` returns a ``JobHandle``; ``result()`` drives the
 dispatch). A streaming epilogue serves the same mix with per-request
-deadlines through the continuous-batching front-end.
+deadlines through the continuous-batching front-end, and a resilience
+epilogue replays it under seeded fault injection (transient faults
+retried, a poisoned tenant quarantined by bisection).
 
     PYTHONPATH=src python examples/fleet_quickstart.py
 """
@@ -18,8 +20,9 @@ import numpy as np
 
 from repro.core import MeshSpec, sobel_grid
 from repro.core import applications as apps
+from repro.runtime import FaultInjector, RetryPolicy
 from repro.runtime.fleet import PixieFleet
-from repro.serve import FleetFrontend, StreamingFrontend
+from repro.serve import FleetFrontend, QuarantinedError, StreamingFrontend
 
 
 def main():
@@ -109,6 +112,43 @@ def main():
           f"deadline misses: {lat['deadline_misses']}")
     assert lat["deadline_misses"] == 0
     print("streaming serving under deadline  [ok]")
+
+    # Resilience epilogue: the same mix with a seeded fault injector.  A
+    # transient dispatch blip is retried invisibly; a permanently
+    # poisoned tenant is isolated by bisection and surfaces as a typed
+    # QuarantinedError on ITS handles only -- batchmates still get
+    # bitwise-correct outputs.
+    print("\n--- self-healing serving (seeded fault injection) ---")
+    faults = (FaultInjector(seed=0)
+              .inject("dispatch", max_fires=2)            # transient blip
+              .inject("dispatch", transient=False,
+                      match=("<app:threshold>",)))        # poisoned tenant
+    chaos_fleet = PixieFleet(default_grid=sobel_grid(), faults=faults,
+                             retry=RetryPolicy(backoff_base_s=1e-3))
+    with StreamingFrontend(fleet=chaos_fleet, target_batch=4) as stream:
+        hs = [stream.submit(tenants[i % len(tenants)], frame)
+              for i, frame in enumerate(frames)]
+        served = quarantined = 0
+        for h, frame in zip(hs, frames):
+            try:
+                out = h.result(timeout=30.0)
+            except QuarantinedError as e:
+                assert e.app == "threshold" and e.ticket is not None
+                quarantined += 1
+                continue
+            served += 1
+            kernel = {"sobel_x": apps.SOBEL_X, "sobel_y": apps.SOBEL_Y,
+                      "laplace": apps.LAPLACE}.get(h.app)
+            if kernel is not None:
+                assert np.array_equal(out, apps.conv2d_reference(
+                    np.asarray(frame), kernel))
+    s = chaos_fleet.stats
+    print(f"served {served}, quarantined {quarantined} "
+          f"(retries {s.retries}, fallbacks {s.fallback_dispatches})")
+    assert quarantined == sum(1 for i in range(len(frames))
+                              if tenants[i % len(tenants)] == "threshold")
+    assert served == len(frames) - quarantined
+    print("poison isolated, batchmates served bitwise  [ok]")
     print("\nfleet quickstart complete.")
 
 

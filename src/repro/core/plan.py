@@ -51,7 +51,7 @@ import dataclasses
 import hashlib
 import warnings
 from functools import partial
-from typing import Callable, Dict, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -452,6 +452,62 @@ class OverlayPlan:
         if self.ingest != "sync":
             parts.append(self.ingest)
         return "|".join(parts)
+
+
+def replace_plan(plan: OverlayPlan, **overrides: Any) -> OverlayPlan:
+    """``dataclasses.replace`` that is safe for pipeline plans.
+
+    ``__post_init__`` derives ``fused``/``radius`` from the pipeline
+    stages and rejects passing both, so a naive ``replace`` (which
+    re-passes every field) raises on any pipeline plan.  Reconstruct from
+    the orthogonal axes instead; plain plans go through ``replace``."""
+    if plan.pipeline is not None:
+        fields = dict(
+            grid=plan.grid, batched=True, pipeline=plan.pipeline,
+            backend=plan.backend, mesh=plan.mesh,
+            tile_rows=plan.tile_rows, ingest=plan.ingest,
+        )
+        fields.update(overrides)
+        return OverlayPlan(**fields)
+    return dataclasses.replace(plan, **overrides)
+
+
+def fallback_chain(plan: OverlayPlan) -> Tuple[OverlayPlan, ...]:
+    """The graceful-degradation ladder of ``plan``, most- to
+    least-capable: each step strips ONE risky axis while preserving the
+    request-shaped axes (grid, fusion, radius/pipeline, ingest), so any
+    step can serve the exact same dispatch operands.
+
+      1. ``backend="pallas"`` -> ``"xla"`` (the bitwise oracle);
+      2. 2-D ``MeshSpec(app=a, rows=r)`` -> ``app_only()`` (drop the
+         halo-exchanging rows axis);
+      3. ``MeshSpec(app=a)`` -> single device;
+      4. ``tile_rows`` -> ``None`` (untiled pixel axis).
+
+    Every step is bitwise-equal to the primary by the parity guarantees
+    each axis carries (enforced in CI), so a circuit breaker can degrade
+    dispatch-by-dispatch without changing results.  Each entry is a
+    distinct :class:`OverlayPlan` -- i.e. just another plan-cache key, so
+    fallback executables cost one compile each, ever."""
+    chain: List[OverlayPlan] = []
+    cur = plan
+
+    def step(**overrides: Any) -> None:
+        nonlocal cur
+        nxt = replace_plan(cur, **overrides)
+        if nxt != cur:
+            chain.append(nxt)
+            cur = nxt
+
+    if cur.backend != "xla":
+        step(backend="xla")
+    if cur.mesh.rows > 1:
+        step(mesh=cur.mesh.app_only())
+    if cur.mesh.app > 1:
+        step(mesh=MeshSpec())
+    if cur.tile_rows is not None:
+        step(tile_rows=None)
+    return tuple(chain)
 
 
 class OverlayExecutable:

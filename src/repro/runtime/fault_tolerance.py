@@ -1,24 +1,30 @@
-"""Fault tolerance & straggler mitigation for 1000+-node runs.
+"""Crash-restart state and straggler detection for single-process runs.
 
-Pieces (all exercised by tests on CPU; the same logic drives a multi-host
-deployment where each component sees per-host heartbeats):
+Honest scope (this module long claimed "1000+-node runs"; it has never
+been more than the local building blocks):
 
 * ``RunState`` + ``resume_or_init``: crash-restart protocol on top of the
   atomic checkpointer -- a restarted job resumes from the newest committed
   step; torn/partial checkpoints are skipped and garbage-collected.
-* ``HeartbeatMonitor``: wall-clock step-duration tracker with a robust
-  (median * k) straggler threshold; flags slow steps/hosts and drives the
-  mitigation hook (re-dispatch, hot-spare swap -- pluggable callback).
-* ``ElasticPlan``: given a changed device count, recompute the mesh and
-  report whether a restore can reshard (our checkpoints are
-  topology-agnostic: leaves are full logical arrays, re-placed against the
-  new mesh on restore).
+  Exercised in-process only; there is no multi-host coordinator here.
+* ``HeartbeatMonitor``: wall-clock duration tracker with a robust
+  (median * k) straggler threshold.  PR 10 wired it into the serving
+  path: ``PixieFleet._settle_flush`` feeds every flush's wall time in,
+  and a flagged straggler counts as a circuit-breaker failure against
+  the plans that flush dispatched (when the fleet is armed for
+  resilience) -- see :mod:`repro.runtime.resilience`.
+* ``ElasticPlan``: DEPRECATED.  It predates the serving stack and plans
+  LM-style (data, model) meshes that nothing here dispatches.  For
+  degrading a *serving* plan when capacity changes, use the bitwise-safe
+  ladder in :func:`repro.core.plan.fallback_chain` (which steps
+  ``MeshSpec`` down the same way a breaker fallback does).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -99,11 +105,25 @@ class HeartbeatMonitor:
 
 @dataclasses.dataclass
 class ElasticPlan:
-    """Re-mesh decision when the healthy device count changes."""
+    """DEPRECATED re-mesh decision when the healthy device count changes.
+
+    Plans LM-style (data, model) meshes that no longer match anything the
+    overlay runtime dispatches.  Use
+    :func:`repro.core.plan.fallback_chain` /
+    :class:`repro.parallel.axes.MeshSpec` for serving-plan degradation.
+    """
 
     old_shape: Tuple[int, ...]
     new_devices: int
     axis_names: Tuple[str, ...]
+
+    def __post_init__(self):
+        warnings.warn(
+            "ElasticPlan is deprecated: it plans LM-style (data, model) "
+            "meshes the overlay runtime never dispatches; use "
+            "repro.core.plan.fallback_chain / MeshSpec degradation instead",
+            DeprecationWarning, stacklevel=2,
+        )
 
     def plan(self) -> Optional[Tuple[int, ...]]:
         """Largest mesh of the same rank that fits `new_devices`, keeping

@@ -71,12 +71,17 @@ from repro.core.grid import GridSpec
 from repro.core.ingest import IngestPlan, ReadinessProbe, check_ingest
 from repro.core.pixie import map_app
 from repro.core.plan import (
-    OverlayExecutable, OverlayPlan, PipelineSpec, compile_plan,
+    OverlayExecutable, OverlayPlan, PipelineSpec, compile_plan, fallback_chain,
 )
 from repro.core.tiling import (
     TILE_AUTO, check_tile_rows, pow2_bucket, round_up, row_band,
 )
 from repro.parallel.axes import APP_AXIS, ROW_AXIS, MeshSpec, build_mesh
+from repro.runtime.chaos import FaultInjector
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.runtime.resilience import (
+    BreakerBoard, PoisonedOutputError, QuarantinedError, RetryPolicy,
+)
 
 
 class LRUCache:
@@ -202,6 +207,21 @@ class FleetStats:
     # the exact executable involved, not just the backend.
     dispatch_plans: Dict[str, int] = dataclasses.field(default_factory=dict)
     evicted_plans: List[str] = dataclasses.field(default_factory=list)
+    # -- resilience telemetry (PR 10) ------------------------------------
+    retries: int = 0             # re-dispatch attempts after a transient failure
+    quarantined_requests: int = 0  # tickets isolated by bisection + failed
+    # Dispatches served by a degraded plan from the fallback chain
+    # (pallas->xla, 2-D mesh->app-only->single device, tiled->untiled)
+    # because the primary plan failed or its breaker was open.
+    fallback_dispatches: int = 0
+    guard_failures: int = 0      # outputs rejected by the NaN/Inf guard
+    straggler_flushes: int = 0   # flushes the HeartbeatMonitor flagged
+    # Every circuit-breaker transition, in order: {"plan", "event", "t",
+    # "consecutive_failures"}.  The list is SHARED with the fleet's
+    # BreakerBoard, so it is always current without copying.
+    breaker_events: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list
+    )
 
     def stamp_dispatch(self, plan: OverlayPlan, tile: str) -> None:
         key = f"{plan.key()}|{tile}"
@@ -264,6 +284,11 @@ class PixieFleet:
         ingest: str = "sync",
         tile_rows: Union[int, str, None] = TILE_AUTO,
         devices: Optional[int] = None,
+        faults: Optional[FaultInjector] = None,
+        retry: Optional[RetryPolicy] = None,
+        breakers: Optional[BreakerBoard] = None,
+        heartbeat: Optional[HeartbeatMonitor] = None,
+        output_guard: Optional[bool] = None,
     ):
         self.default_grid = default_grid or gridlib.sobel_grid()
         # Execution backend for every dispatch: "xla" (the hand-lowered
@@ -359,6 +384,41 @@ class PixieFleet:
         self._results: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self.max_retained_results = int(max_retained_results)
         self._next_ticket = 0
+        # -- resilience (PR 10) ----------------------------------------------
+        # Dispatch is ALWAYS resilient: transient failures retry with a
+        # deterministic backoff, a persistently failing plan degrades down
+        # its fallback chain behind a per-plan-key circuit breaker, and a
+        # request no plan can serve is isolated by bisection and fails
+        # ONLY its own ticket (stored in _failures, raised by result()).
+        # The policy objects are pure host control flow -- on the happy
+        # path they cost a dict lookup per flush group.
+        self.faults = faults
+        self.retry = retry or RetryPolicy()
+        self.breakers = breakers or BreakerBoard()
+        # Flush wall times feed the seed HeartbeatMonitor; a flagged
+        # straggler flush counts as a breaker failure for every plan it
+        # dispatched -- but only when the caller opted into chaos/breaker
+        # tuning (faults= or breakers=), so CI noise can never degrade a
+        # vanilla fleet's plans.
+        self.heartbeat = heartbeat if heartbeat is not None else HeartbeatMonitor()
+        self._straggler_trips_breaker = (
+            faults is not None or breakers is not None or heartbeat is not None
+        )
+        # NaN/Inf output guard (inexact dtypes only -- integer fabrics
+        # cannot encode NaN).  Defaults on exactly when faults are
+        # installed: the guard forces async outputs eagerly, which would
+        # tax the happy path's ingest overlap.
+        self._guard = bool(faults is not None if output_guard is None
+                           else output_guard)
+        # Per-ticket failures awaiting redemption: result() raises them,
+        # front-ends drain them via pop_failures().  Bounded like _results.
+        self._failures: "OrderedDict[int, BaseException]" = OrderedDict()
+        # Per-flush scratch: breakers owed a success at flush end (the
+        # success is deferred so a straggler flush can convert it into a
+        # breaker failure), and the memoized fallback chains.
+        self._flush_successes: List[Tuple[Any, str]] = []
+        self._chain_cache = LRUCache(64)
+        self.stats.breaker_events = self.breakers.events
         # pack_s accumulates host-side input preparation (submit time);
         # dispatch_s accumulates time inside overlay executions; flush_s is
         # the wall time of the most recent flush.
@@ -446,6 +506,12 @@ class PixieFleet:
         if fn is not None:
             self.stats.overlay_cache_hits += 1
             return fn
+        if self.faults is not None:
+            # Compile faults fire on cache MISSES only: a cached plan
+            # cannot fail to compile.  A failing build is never cached,
+            # so the spec keeps firing until exhausted -- exactly like a
+            # real deterministic compile error.
+            self.faults.fire("compile", (f"plan:{plan.key()}",))
         fn = compile_plan(plan)
         self.stats.overlay_builds += 1
         for evicted in self._overlays.put(plan, fn):
@@ -513,7 +579,11 @@ class PixieFleet:
         return ticket
 
     def result(self, ticket: int) -> np.ndarray:
-        """Redeem a flushed ticket (pops it from the retained results)."""
+        """Redeem a flushed ticket (pops it from the retained results).
+        A quarantined ticket raises its stored failure -- the typed
+        QuarantinedError carrying the ticket and underlying cause."""
+        if ticket in self._failures:
+            raise self._failures.pop(ticket)
         try:
             return self._results.pop(ticket)
         except KeyError:
@@ -783,10 +853,16 @@ class PixieFleet:
         return _Prepared(grid, cfgs[0], "pipeline", image, hw, spec=spec)
 
     def _dispatch_fused(
-        self, grid: GridSpec, radius: int,
+        self, plan: OverlayPlan,
         items: List[Tuple[int, _Prepared]], out: Dict[int, np.ndarray],
     ) -> None:
         """One fused dispatch: raw frames -> outputs, line buffers inside.
+
+        ``plan`` carries the execution axes (backend/mesh/tiling): the
+        resilient flush passes the fleet's primary plan normally and a
+        degraded sibling from :func:`repro.core.plan.fallback_chain` when
+        the primary's circuit breaker is open -- same operands, same
+        bitwise outputs, different executable.
 
         Frames are embedded top-left into one zero canvas [n_tile, Hb, Wb]
         (pow-2-bucketed sides, app axis rounded to batch_tile; reused from
@@ -804,17 +880,18 @@ class PixieFleet:
         packing of the next flush overlaps this flush's device execution.
         """
         t0 = time.perf_counter()
-        fn = self.fused_overlay_for(grid, radius)
+        fn = self.overlay_executable(plan)
+        grid, radius = plan.grid, plan.radius
         n = len(items)
         n_tile = round_up(n, self._app_tile)
         Hb = pow2_bucket(max(p.hw[0] for _, p in items), self.min_image_side)
         Wb = pow2_bucket(max(p.hw[1] for _, p in items), self.min_image_side)
-        if self.mesh.rows > 1:
+        if plan.mesh.rows > 1:
             # Row-sharded plans band-split Hb across the rows axis: round
             # it to a whole number of radius-floored bands so the sharded
             # ship path and the executable's in-spec agree on the band
             # split and the executable's own row padding is a no-op.
-            Hb = row_band(Hb, self.mesh.rows, radius) * self.mesh.rows
+            Hb = row_band(Hb, plan.mesh.rows, radius) * plan.mesh.rows
         configs = [p.cfg for _, p in items]
         # Tile padding on the app axis: replay config[0] on a zero frame.
         configs += [configs[0]] * (n_tile - n)
@@ -851,7 +928,9 @@ class PixieFleet:
         self._note_overlap(t0)
         self.timings["pack_s"] += time.perf_counter() - t0
         t0 = time.perf_counter()
+        self._pre_dispatch(plan, items)
         ys = fn(stacked, ingests, frames)
+        ys = self._corrupt_outputs(plan, items, ys)
         self.stats.dispatches += 1
         self.stats.fused_dispatches += 1
         self.stats.stamp_dispatch(fn.plan, f"n{n_tile}x{Hb}x{Wb}")
@@ -869,7 +948,7 @@ class PixieFleet:
         self.timings["dispatch_s"] += time.perf_counter() - t0
 
     def _dispatch_pipeline(
-        self, grid: GridSpec, radii: Tuple[int, ...],
+        self, plan: OverlayPlan,
         items: List[Tuple[int, _Prepared]], out: Dict[int, np.ndarray],
     ) -> None:
         """One chained dispatch: raw frames -> final-stage outputs, every
@@ -884,18 +963,22 @@ class PixieFleet:
         the per-app true frame extents ``hw`` that executors use to
         re-mask intermediates.  Padded app slots replay item 0's chain on
         a zero frame and are sliced off -- outputs are bitwise identical
-        to per-stage sequential flushes."""
+        to per-stage sequential flushes.
+
+        ``plan`` arrives pre-built (the app-tile-padded spec tuple IS a
+        plan axis), normally the primary from :meth:`_primary_plan`, or a
+        degraded fallback sibling when the primary's breaker is open."""
         t0 = time.perf_counter()
-        n = len(items)
-        n_tile = round_up(n, self._app_tile)
-        specs = [p.spec for _, p in items]
-        specs += [specs[0]] * (n_tile - n)
-        plan = self.plan_for_dispatch(grid, fused=True, pipeline=tuple(specs))
+        grid = plan.grid
         fn = self.overlay_executable(plan)
+        n = len(items)
+        n_tile = len(plan.pipeline)
+        specs = list(plan.pipeline)
+        radii = specs[0].radii
         Hb = pow2_bucket(max(p.hw[0] for _, p in items), self.min_image_side)
         Wb = pow2_bucket(max(p.hw[1] for _, p in items), self.min_image_side)
-        if self.mesh.rows > 1:
-            Hb = row_band(Hb, self.mesh.rows, plan.radius) * self.mesh.rows
+        if plan.mesh.rows > 1:
+            Hb = row_band(Hb, plan.mesh.rows, plan.radius) * plan.mesh.rows
         self.stats.padded_app_slots += n_tile - n
         self.stats.partial_tile_dispatches += 1 if n < n_tile else 0
 
@@ -934,7 +1017,9 @@ class PixieFleet:
         self._note_overlap(t0)
         self.timings["pack_s"] += time.perf_counter() - t0
         t0 = time.perf_counter()
+        self._pre_dispatch(plan, items)
         ys = fn(stage_settings, hw, frames)
+        ys = self._corrupt_outputs(plan, items, ys)
         self.stats.dispatches += 1
         self.stats.fused_dispatches += 1
         self.stats.pipeline_dispatches += 1
@@ -953,16 +1038,18 @@ class PixieFleet:
         self.timings["dispatch_s"] += time.perf_counter() - t0
 
     def _dispatch_packed(
-        self, grid: GridSpec,
+        self, plan: OverlayPlan,
         items: List[Tuple[int, _Prepared]], out: Dict[int, np.ndarray],
     ) -> None:
         """One unfused dispatch over host-packed [channels, batch] inputs
         (named-channel requests and image apps without an ingest plan).
         Async ingest donates the channel stack and unpacks lazily, same as
         the fused path (the stack is rebuilt per flush, so donation is
-        always safe)."""
+        always safe).  ``plan`` carries the execution axes, exactly like
+        :meth:`_dispatch_fused`."""
         t0 = time.perf_counter()
-        fn = self.overlay_for(grid)
+        grid = plan.grid
+        fn = self.overlay_executable(plan)
         n = len(items)
         n_tile = round_up(n, self._app_tile)
         batch = pow2_bucket(max(p.payload.shape[-1] for _, p in items),
@@ -980,7 +1067,9 @@ class PixieFleet:
         self.timings["pack_s"] += time.perf_counter() - t0
 
         t0 = time.perf_counter()
+        self._pre_dispatch(plan, items)
         ys = fn(stacked, xstack)
+        ys = self._corrupt_outputs(plan, items, ys)
         self.stats.dispatches += 1
         self.stats.stamp_dispatch(fn.plan, f"n{n_tile}xb{batch}")
         self.stats.executed += n
@@ -1001,6 +1090,237 @@ class PixieFleet:
                     y = y[0] if y.shape[0] == 1 else y
                 out[ticket] = y
         self.timings["dispatch_s"] += time.perf_counter() - t0
+
+    # -- resilient dispatch (PR 10) -------------------------------------------
+
+    def _primary_plan(self, key: Tuple,
+                      items: List[Tuple[int, _Prepared]]) -> OverlayPlan:
+        """The fleet-configured plan of one flush group.  Pipeline groups
+        bake their app-tile-padded spec tuple into the plan (padding is
+        executable shape), so the plan is recomputed per work set during
+        bisection."""
+        grid = key[0]
+        if key[1] == "image":
+            return self.plan_for_dispatch(grid, fused=True, radius=key[2])
+        if key[1] == "pipe":
+            n_tile = round_up(len(items), self._app_tile)
+            specs = [p.spec for _, p in items]
+            specs += [specs[0]] * (n_tile - len(items))
+            return self.plan_for_dispatch(grid, fused=True,
+                                          pipeline=tuple(specs))
+        return self.plan_for_dispatch(grid, fused=False)
+
+    def _dispatch_plan(self, plan: OverlayPlan, kind: str,
+                       items: List[Tuple[int, _Prepared]],
+                       out: Dict[int, np.ndarray]) -> None:
+        if kind == "image":
+            self._dispatch_fused(plan, items, out)
+        elif kind == "pipe":
+            self._dispatch_pipeline(plan, items, out)
+        else:
+            self._dispatch_packed(plan, items, out)
+
+    def _candidates(self, plan: OverlayPlan) -> Tuple[OverlayPlan, ...]:
+        """``(primary, *fallback_chain)`` with the chain memoized per plan
+        (plans are frozen/hashable; building the chain costs a few
+        dataclass constructions we don't want per flush)."""
+        chain = self._chain_cache.get(plan)
+        if chain is None:
+            chain = (plan, *fallback_chain(plan))
+            self._chain_cache.put(plan, chain)
+        return chain
+
+    def _fault_tokens(self, plan: OverlayPlan,
+                      items: List[Tuple[int, _Prepared]]) -> List[str]:
+        """Context tokens a FaultSpec's ``match=`` is tested against:
+        the plan key plus every rider's ticket and app name (bracketed so
+        ``<ticket:1>`` never substring-matches ``<ticket:12>``)."""
+        tokens = [f"plan:{plan.key()}"]
+        for ticket, p in items:
+            tokens.append(f"<ticket:{ticket}>")
+            tokens.append(f"<app:{p.cfg.app_name}>")
+        return tokens
+
+    def _pre_dispatch(self, plan: OverlayPlan,
+                      items: List[Tuple[int, _Prepared]]) -> None:
+        """Fire the stall and dispatch hook points (no-op without an
+        injector: one attribute check, the zero-overhead contract)."""
+        if self.faults is None:
+            return
+        tokens = self._fault_tokens(plan, items)
+        self.faults.fire("transfer_stall", tokens)
+        self.faults.fire("dispatch", tokens)
+
+    def _corrupt_outputs(self, plan: OverlayPlan,
+                         items: List[Tuple[int, _Prepared]], ys):
+        """Apply armed ``nan_output`` corruption to the dispatch's output
+        batch (inexact dtypes only: integer fabrics cannot encode NaN, so
+        the output guard scopes itself the same way)."""
+        if self.faults is None:
+            return ys
+        if not jnp.issubdtype(jnp.asarray(ys).dtype, jnp.inexact):
+            return ys
+        slots = self.faults.corrupt_slots(
+            [[f"<ticket:{t}>", f"<app:{p.cfg.app_name}>"] for t, p in items]
+        )
+        for i in slots:
+            ys = ys.at[i].set(jnp.nan)
+        return ys
+
+    def _guard_outputs(self, got: Dict[int, Any],
+                       items: List[Tuple[int, _Prepared]],
+                       ) -> List[Tuple[int, _Prepared]]:
+        """The NaN/Inf output guard: pops poisoned tickets out of ``got``
+        and returns their work items (the resilient loop re-dispatches
+        just those).  Float outputs only; forces async lazy outputs, which
+        is why the guard defaults on only when faults are installed."""
+        if not self._guard:
+            return []
+        bad = []
+        for ticket, prep in items:
+            y = got.get(ticket)
+            if y is None:
+                continue
+            arr = np.asarray(y)
+            if (np.issubdtype(arr.dtype, np.floating)
+                    and not np.isfinite(arr).all()):
+                bad.append((ticket, prep))
+                del got[ticket]
+        return bad
+
+    def _quarantine(self, ticket: int, prep: _Prepared,
+                    cause: Optional[BaseException]) -> None:
+        """Fail ONE isolated request: record a QuarantinedError against
+        its ticket (raised by result(), drained by front-ends via
+        pop_failures) -- the batch it rode dispatches on without it."""
+        self.stats.quarantined_requests += 1
+        exc = QuarantinedError(ticket, app=prep.cfg.app_name, cause=cause)
+        if cause is not None:
+            exc.__cause__ = cause
+        self._failures[ticket] = exc
+        while len(self._failures) > self.max_retained_results:
+            self._failures.popitem(last=False)
+
+    def _dispatch_resilient(self, key: Tuple,
+                            items: List[Tuple[int, _Prepared]],
+                            out: Dict[int, np.ndarray]) -> None:
+        """One flush group through the self-healing ladder:
+
+        1. the primary plan, retried with deterministic backoff on
+           *transient* failures (``RetryPolicy.should_retry``);
+        2. on exhaustion/non-transient failure -- or when the primary's
+           circuit breaker is open -- each plan of the fallback chain in
+           turn (every step bitwise-equal by construction, each behind
+           its own breaker);
+        3. outputs through the NaN/Inf guard: clean tickets commit, and
+           only the poisoned ones go around again;
+        4. if EVERY plan fails the whole work set, bisect: halves recurse
+           independently, so poison is isolated to exactly the offending
+           request(s), whose tickets fail with QuarantinedError while all
+           survivors dispatch normally.
+
+        Breaker successes are deferred to flush end (_settle_flush): a
+        straggler flush converts them into breaker failures when the
+        fleet is armed for it."""
+        kind = key[1]
+        primary = self._primary_plan(key, items)
+        candidates = self._candidates(primary)
+        last_exc: Optional[BaseException] = None
+        tried_any = False
+        for ci, cand in enumerate(candidates):
+            br = self.breakers.breaker(cand.key())
+            last_resort = ci == len(candidates) - 1 and not tried_any
+            if not br.allow() and not last_resort:
+                continue
+            tried_any = True
+            for attempt in range(self.retry.max_attempts):
+                if attempt:
+                    self.stats.retries += 1
+                    time.sleep(self.retry.backoff_s(attempt - 1))
+                got: Dict[int, Any] = {}
+                try:
+                    self._dispatch_plan(cand, kind, items, got)
+                    bad = self._guard_outputs(got, items)
+                except Exception as exc:  # noqa: BLE001 -- routed: retried here, then degraded down the fallback chain or quarantined to the offending ticket below
+                    last_exc = exc
+                    br.record_failure()
+                    if self.retry.should_retry(exc):
+                        continue
+                    break
+                if bad:
+                    out.update(got)
+                    self.stats.guard_failures += len(bad)
+                    br.record_failure("nan_guard")
+                    last_exc = PoisonedOutputError(
+                        f"{len(bad)}/{len(items)} outputs of plan "
+                        f"{cand.key()} failed the NaN/Inf guard"
+                    )
+                    if len(bad) < len(items):
+                        # Survivors committed; the poisoned subset takes
+                        # the whole ladder again from the primary.
+                        self._dispatch_resilient(key, bad, out)
+                        return
+                    continue  # whole batch poisoned: burn a retry
+                out.update(got)
+                self._flush_successes.append((br, cand.key()))
+                if ci:   # not the primary (by position: the memoized
+                    # chain returns value-equal but distinct plan objects)
+                    self.stats.fallback_dispatches += 1
+                return
+        if len(items) == 1:
+            ticket, prep = items[0]
+            self._quarantine(ticket, prep, last_exc)
+            return
+        mid = len(items) // 2
+        self._dispatch_resilient(key, items[:mid], out)
+        self._dispatch_resilient(key, items[mid:], out)
+
+    def _settle_flush(self, dispatched: bool, flush_s: float) -> None:
+        """Flush epilogue: feed the wall time to the HeartbeatMonitor and
+        settle the deferred breaker successes -- a straggler flush counts
+        against every plan it dispatched (when armed: faults/breakers/
+        heartbeat explicitly installed), otherwise each plan records its
+        success."""
+        straggler = False
+        if dispatched and self.heartbeat is not None:
+            straggler = self.heartbeat.record(self.stats.dispatches, flush_s)
+            if straggler:
+                self.stats.straggler_flushes += 1
+        punish = straggler and self._straggler_trips_breaker
+        for br, _key in self._flush_successes:
+            if punish:
+                br.record_failure("straggler")
+            else:
+                br.record_success()
+        self._flush_successes = []
+
+    def pop_failures(self) -> Dict[int, BaseException]:
+        """Drain per-ticket failures (QuarantinedError etc.) recorded by
+        resilient flushes -- front-ends route each to its own JobHandle.
+        Tickets not drained here raise from :meth:`result`."""
+        if not self._failures:
+            return {}
+        failures = dict(self._failures)
+        self._failures.clear()
+        return failures
+
+    def install_faults(self, faults) -> None:
+        """Arm an injector after construction (the streaming front-end
+        installs its injector into the fleet it owns).  Installing faults
+        also arms the NaN/Inf output guard and the straggler->breaker
+        coupling, same as passing ``faults=`` at construction."""
+        self.faults = faults
+        self._guard = True
+        self._straggler_trips_breaker = True
+
+    def cancel_pending(self) -> int:
+        """Drop every submitted-but-unflushed request (no results, no
+        failures recorded); returns how many were dropped.  The streaming
+        supervisor calls this after a worker crash so a restarted worker
+        never re-serves tickets whose handles were already failed."""
+        n = len(self._pending)
+        self._pending.clear()
+        return n
 
     def pending_count(self) -> int:
         """Requests submitted but not yet flushed (the continuous-batching
@@ -1055,14 +1375,12 @@ class PixieFleet:
         out: Dict[int, np.ndarray] = {}
         t0 = time.perf_counter()
         self.timings["flush_started"] = t0
+        self._flush_successes = []
         for key, items in groups.items():
-            if key[1] == "image":
-                self._dispatch_fused(key[0], key[2], items, out)
-            elif key[1] == "pipe":
-                self._dispatch_pipeline(key[0], key[2], items, out)
-            else:
-                self._dispatch_packed(key[0], items, out)
-        self.timings["flush_s"] = time.perf_counter() - t0
+            self._dispatch_resilient(key, items, out)
+        flush_s = time.perf_counter() - t0
+        self.timings["flush_s"] = flush_s
+        self._settle_flush(bool(groups), flush_s)
         self._results.update(out)
         while len(self._results) > self.max_retained_results:
             self._results.popitem(last=False)
@@ -1075,6 +1393,10 @@ class PixieFleet:
         beyond ``max_retained_results``."""
         tickets = [self.submit(r) for r in requests]
         outs = self.flush()
+        failures = self.pop_failures()
         for t in tickets:
             self.discard(t)
+        for t in tickets:
+            if t in failures:
+                raise failures[t]
         return [outs[t] for t in tickets]

@@ -1,7 +1,8 @@
 from repro.serve.engine import ServeConfig, ServeEngine, SlotServer
 from repro.serve.fleet_frontend import FleetFrontend
 from repro.serve.service import (
-    AdmissionError, ImageJob, ImageService, JobHandle, LatencyStats,
+    AdmissionError, DispatchError, ImageJob, ImageService, JobHandle,
+    JobTimeout, LatencyStats, QuarantinedError, ServiceError,
 )
 from repro.serve.streaming import StreamingFrontend
 
@@ -10,4 +11,5 @@ __all__ = [
     "FleetFrontend", "StreamingFrontend",
     "ImageService", "ImageJob", "JobHandle",
     "LatencyStats", "AdmissionError",
+    "ServiceError", "DispatchError", "QuarantinedError", "JobTimeout",
 ]

@@ -174,8 +174,17 @@ class FleetFrontend(ImageService):
 
     def flush(self) -> List[ImageJob]:
         """Drain the queue: one batched dispatch per grid group.  Resolves
-        every pending handle and records the queue/flush latency split."""
+        every pending handle and records the queue/flush latency split.
+        Tickets quarantined by the fleet's resilient flush fail their own
+        handle with the stored :class:`QuarantinedError`; batchmates are
+        served normally."""
         outs = self.fleet.flush()
+        for ticket, exc in self.fleet.pop_failures().items():
+            self._arrivals.pop(ticket, None)
+            self.latency.record_failure()
+            handle = self._handles.pop(ticket, None)
+            if handle is not None:
+                handle._fail(exc)
         flush_started = self.fleet.timings.get("flush_started", time.perf_counter())
         flush_s = self.fleet.timings.get("flush_s", 0.0)
         seq = self._flush_seq

@@ -14,8 +14,20 @@ This module also owns the serving telemetry: :class:`LatencyStats` keeps
 windowed per-request ``queue_s`` / ``flush_s`` / ``total_s`` samples
 (p50/p95/p99) plus cumulative deadline-miss and shed counters, riding
 alongside the fleet's :class:`~repro.runtime.fleet.FleetStats`; and the
-typed :class:`AdmissionError` that a backpressured bounded queue raises
-instead of growing without bound.
+typed exception hierarchy every serving failure derives from:
+
+    ServiceError                the base clients catch wholesale
+    +-- AdmissionError          shed before a ticket existed (backpressure)
+    +-- DispatchError           admitted, then lost/failed after submit
+    |   +-- QuarantinedError    isolated by bisection quarantine
+    |                           (carries .ticket / .app / .cause)
+    +-- JobTimeout              result(timeout=) or per-request hard
+                                timeout expired (also a TimeoutError)
+
+``DispatchError``/``QuarantinedError``/``JobTimeout`` are *defined* in
+:mod:`repro.runtime.resilience` (the runtime layer raises them; serve
+imports runtime, never the reverse) and re-exported here as the public
+serving surface.
 """
 
 from __future__ import annotations
@@ -30,9 +42,12 @@ import numpy as np
 from repro.core import applications as app_lib
 from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
+from repro.runtime.resilience import (  # noqa: F401  (re-exported surface)
+    DispatchError, JobTimeout, QuarantinedError, ServiceError,
+)
 
 
-class AdmissionError(RuntimeError):
+class AdmissionError(ServiceError):
     """A request was shed by admission control: the service's bounded
     arrival queue was full.  Typed (rather than a bare queue.Full or --
     worse -- unbounded growth) so clients can distinguish overload
@@ -102,7 +117,7 @@ class JobHandle:
         if not self._event.is_set() and self._kick is not None:
             self._kick()
         if not self._event.wait(timeout):
-            raise TimeoutError(
+            raise JobTimeout(
                 f"ticket {self.ticket} ({self.app!r}) not served within "
                 f"{timeout} s"
             )
@@ -112,16 +127,24 @@ class JobHandle:
 
     def result(self, timeout: Optional[float] = None) -> np.ndarray:
         """The output frame; blocks until served.  ``timeout=None`` waits
-        forever, a float raises ``TimeoutError`` on expiry."""
+        forever, a float raises :class:`JobTimeout` (a ``TimeoutError``
+        subclass) on expiry."""
         return self.job(timeout).output
 
     # -- resolution (called by the owning front-end) ------------------------
+    # First resolution wins: the streaming supervisor may race a crash
+    # reconciliation against a dispatch that already completed the handle,
+    # and a late _fail must never overwrite a delivered result.
 
     def _complete(self, job: ImageJob) -> None:
+        if self._event.is_set():
+            return
         self._job = job
         self._event.set()
 
     def _fail(self, exc: BaseException) -> None:
+        if self._event.is_set():
+            return
         self._exc = exc
         self._event.set()
 
@@ -163,6 +186,7 @@ class LatencyStats:
         self.with_deadline = 0
         self.deadline_misses = 0
         self.shed = 0
+        self.failed = 0
 
     def record(self, queue_s: float, flush_s: float, total_s: float,
                deadline_s: Optional[float] = None) -> None:
@@ -180,6 +204,13 @@ class LatencyStats:
         with self._lock:
             self.shed += 1
 
+    def record_failure(self) -> None:
+        """One admitted request that failed post-submit (quarantined,
+        lost to a crash, or hard-timed-out) -- the availability
+        denominator the chaos bench reports against."""
+        with self._lock:
+            self.failed += 1
+
     def reset(self) -> None:
         """Clear samples AND counters (benches call this after warmup so
         compile-time flushes don't pollute the measured percentiles)."""
@@ -191,6 +222,7 @@ class LatencyStats:
             self.with_deadline = 0
             self.deadline_misses = 0
             self.shed = 0
+            self.failed = 0
 
     def summary(self) -> Dict[str, Any]:
         """p50/p95/p99/mean/max per latency component + the SLO counters
@@ -198,6 +230,7 @@ class LatencyStats:
         with self._lock:
             return {
                 "completed": self.completed,
+                "failed": self.failed,
                 "shed": self.shed,
                 "with_deadline": self.with_deadline,
                 "deadline_misses": self.deadline_misses,

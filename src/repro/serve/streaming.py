@@ -65,11 +65,12 @@ from repro.core.dfg import DFG
 from repro.core.grid import GridSpec
 from repro.core.tiling import pow2_bucket
 from repro.parallel.axes import MeshSpec
+from repro.runtime.chaos import FaultInjector
 from repro.runtime.fleet import FleetRequest, PixieFleet
 from repro.serve.fleet_frontend import build_fleet, resolve_frontend_mesh
 from repro.serve.service import (
-    AdmissionError, ImageJob, ImageService, JobHandle, LatencyStats,
-    resolve_app,
+    AdmissionError, DispatchError, ImageJob, ImageService, JobHandle,
+    JobTimeout, LatencyStats, resolve_app,
 )
 
 _STOP = object()   # arrival-queue sentinel: close() wakes the worker with it
@@ -123,9 +124,27 @@ class StreamingFrontend(ImageService):
         ingest: Optional[str] = None,
         devices: Optional[int] = None,
         autostart: bool = True,
+        faults: Optional[FaultInjector] = None,
+        request_timeout_s: Optional[float] = None,
+        max_worker_restarts: int = 8,
     ):
         mesh = resolve_frontend_mesh(mesh, devices, "StreamingFrontend")
         self.fleet = build_fleet(fleet, backend, mesh, ingest)
+        if faults is not None:
+            # One injector serves BOTH layers: the fleet's hook points
+            # (compile/dispatch/nan_output/transfer_stall) and the
+            # worker loop's "worker_death" -- a single seeded schedule.
+            self.fleet.install_faults(faults)
+        # Per-request hard timeout: a request that has waited this long
+        # without being served fails its handle with JobTimeout (the
+        # worker sweeps expiries every wakeup, so no client waits on work
+        # the server has silently given up on).
+        if request_timeout_s is not None and request_timeout_s <= 0:
+            raise ValueError(
+                f"request_timeout_s must be > 0, got {request_timeout_s}"
+            )
+        self.request_timeout_s = request_timeout_s
+        self.max_worker_restarts = int(max_worker_restarts)
         self.registry = dict(registry) if registry is not None else dict(app_lib.ALL_APPS)
         self.target_batch = int(target_batch or self.fleet.batch_tile)
         if self.target_batch < 1:
@@ -151,7 +170,21 @@ class StreamingFrontend(ImageService):
         self._seq_lock = threading.Lock()
         self._flush_seq = 0
         self._closed = False
+        # Lifecycle lock: close() flips _closed and submit() enqueues
+        # under the SAME lock, so no submit can slip its request into the
+        # queue after close() has begun draining (the pre-PR 10 race that
+        # could strand a handle behind the _STOP sentinel).
+        self._lifecycle = threading.Lock()
         self._worker: Optional[threading.Thread] = None
+        # Worker state lives on the INSTANCE (not _run locals) so the
+        # supervisor can restart a crashed worker without losing accepted
+        # work: _pending_reqs survives the crash and is re-served, while
+        # _inflight_reqs (mid-dispatch when the worker died) is failed
+        # with a typed DispatchError -- no JobHandle ever hangs.
+        self._pending_reqs: List[_PendingRequest] = []
+        self._inflight_reqs: List[_PendingRequest] = []
+        self._stopping = False
+        self.worker_restarts = 0
         if autostart:
             self.start()
 
@@ -163,7 +196,8 @@ class StreamingFrontend(ImageService):
             raise RuntimeError("streaming front-end already closed")
         if self._worker is None:
             self._worker = threading.Thread(
-                target=self._run, name="pixie-streaming-worker", daemon=True
+                target=self._run_supervised,
+                name="pixie-streaming-worker", daemon=True,
             )
             self._worker.start()
         return self
@@ -171,9 +205,10 @@ class StreamingFrontend(ImageService):
     def close(self, timeout: Optional[float] = 30.0) -> None:
         """Drain everything already accepted, then stop the worker.
         Safe to call twice; new submits after close are rejected."""
-        if self._closed:
-            return
-        self._closed = True
+        with self._lifecycle:
+            if self._closed:
+                return
+            self._closed = True
         if self._worker is None:
             # Never started: fail the accepted-but-unserved handles so no
             # client blocks forever on a server that will not run.
@@ -257,12 +292,20 @@ class StreamingFrontend(ImageService):
             deadline_at=None if deadline_s is None else t_arrival + deadline_s,
             deadline_s=deadline_s, handle=handle,
         )
-        try:
-            self._queue.put_nowait(pending)
-        except queue.Full:
-            self.latency.record_shed()
-            raise AdmissionError(queued=self._queue.qsize(),
-                                 bound=self.max_queue) from None
+        # Enqueue ATOMICALLY with the closed check: close() flips _closed
+        # under the same lock before it inserts the _STOP sentinel, so an
+        # accepted request always precedes the sentinel in the FIFO and is
+        # drained -- a submit racing close can no longer strand its handle
+        # behind a queue the worker has already finished.
+        with self._lifecycle:
+            if self._closed:
+                raise RuntimeError("streaming front-end is closed")
+            try:
+                self._queue.put_nowait(pending)
+            except queue.Full:
+                self.latency.record_shed()
+                raise AdmissionError(queued=self._queue.qsize(),
+                                     bound=self.max_queue) from None
         return handle
 
     @property
@@ -316,23 +359,76 @@ class StreamingFrontend(ImageService):
 
     # -- worker -------------------------------------------------------------
 
-    def _run(self) -> None:
-        pending: List[_PendingRequest] = []
-        stopping = False
+    def _run_supervised(self) -> None:
+        """The worker's supervisor: :meth:`_run` is the mortal body.  Any
+        crash -- a fleet bug, an injected ``worker_death``, even a
+        BaseException -- lands here; in-flight jobs are reconciled (failed
+        with a typed DispatchError, never stranded), accepted-but-unflushed
+        work survives in ``_pending_reqs``, and the loop restarts.  A
+        worker that cannot stay alive (``max_worker_restarts`` exceeded)
+        surrenders: the front-end closes and every queued handle fails."""
         while True:
+            try:
+                self._run()
+                return
+            except BaseException as exc:  # noqa: BLE001 -- routed: in-flight handles fail typed, queued work re-serves after restart
+                if not self._reconcile_crash(exc):
+                    return
+
+    def _reconcile_crash(self, exc: BaseException) -> bool:
+        """Crash bookkeeping; returns False when the supervisor gives up."""
+        self.worker_restarts += 1
+        lost, self._inflight_reqs = self._inflight_reqs, []
+        for p in lost:
+            if not p.handle.done():
+                self.latency.record_failure()
+                p.handle._fail(DispatchError(
+                    f"request {p.name!r} (seq {p.seq}) was in flight when "
+                    f"the streaming worker crashed ({exc!r}); resubmit"
+                ))
+        # Their fleet submissions (if any) died with the dispatch: drop
+        # them so a restarted worker never re-serves failed tickets.
+        self.fleet.cancel_pending()
+        if self.worker_restarts <= self.max_worker_restarts:
+            return True
+        err = DispatchError(
+            f"streaming worker died {self.worker_restarts} times "
+            f"(max_worker_restarts={self.max_worker_restarts}); "
+            f"front-end closed: {exc!r}"
+        )
+        with self._lifecycle:
+            self._closed = True
+        for p in self._pending_reqs:
+            if not p.handle.done():
+                self.latency.record_failure()
+                p.handle._fail(err)
+        self._pending_reqs = []
+        self._drain_failed(err)
+        return False
+
+    def _run(self) -> None:
+        pending = self._pending_reqs
+        while True:
+            faults = self.fleet.faults
+            if faults is not None:
+                # The worker-death hook: fires between dispatches (never
+                # mid-flight), so an injected kill exercises the restart
+                # path without fabricating lost work.
+                faults.fire("worker_death")
             # 1. Pull arrivals: block only as long as the launch triggers
-            # allow (deadline slack / linger), then drain without blocking.
+            # allow (deadline slack / linger / hard timeout), then drain
+            # without blocking.
             timeout = self._wake_in(pending)
             try:
                 item = self._queue.get(timeout=timeout)
                 if item is _STOP:
-                    stopping = True
+                    self._stopping = True
                 else:
                     pending.append(item)
                 while True:   # opportunistically drain the burst
                     item = self._queue.get_nowait()
                     if item is _STOP:
-                        stopping = True
+                        self._stopping = True
                     else:
                         pending.append(item)
             except queue.Empty:
@@ -340,15 +436,36 @@ class StreamingFrontend(ImageService):
 
             # 2. Launch decision.
             now = time.perf_counter()
+            self._expire_timeouts(pending, now)
             if pending and (
-                stopping
+                self._stopping
                 or len(pending) >= self.target_batch
                 or self._deadline_urgent(pending, now)
                 or self._lingered(pending, now)
             ):
-                self._dispatch(self._select_batch(pending))
-            if stopping and not pending and self._queue.empty():
+                batch = self._select_batch(pending)
+                self._inflight_reqs = batch
+                self._dispatch(batch)
+                self._inflight_reqs = []
+            if self._stopping and not pending and self._queue.empty():
                 return
+
+    def _expire_timeouts(self, pending: List[_PendingRequest],
+                         now: float) -> None:
+        """Sweep the per-request hard timeout: expired requests fail
+        their own handle with :class:`JobTimeout` and leave the queue."""
+        if self.request_timeout_s is None:
+            return
+        expired = [p for p in pending
+                   if now - p.t_arrival > self.request_timeout_s]
+        for p in expired:
+            pending.remove(p)
+            self.latency.record_failure()
+            p.handle._fail(JobTimeout(
+                f"request {p.name!r} (seq {p.seq}) exceeded the "
+                f"per-request hard timeout ({self.request_timeout_s} s) "
+                f"while queued"
+            ))
 
     def _wake_in(self, pending: List[_PendingRequest]) -> float:
         """How long the worker may block on the arrival queue before a
@@ -456,7 +573,18 @@ class StreamingFrontend(ImageService):
                 + 0.3 * flush_s
             )
         t_done = time.perf_counter()
+        failures = self.fleet.pop_failures()
         for ticket, p in tickets.items():
+            if ticket not in outs:
+                # Quarantined (or otherwise lost) by the resilient flush:
+                # fail exactly this handle, typed; batchmates are served.
+                exc = failures.get(ticket) or DispatchError(
+                    f"ticket {ticket} ({p.name!r}) was not served by its "
+                    f"flush and recorded no failure"
+                )
+                self.latency.record_failure()
+                p.handle._fail(exc)
+                continue
             self.fleet.discard(ticket)
             queue_s = max(0.0, flush_started - p.t_arrival)
             total_s = t_done - p.t_arrival

@@ -55,22 +55,32 @@ def test_heartbeat_timer():
     assert len(mon.durations) == 1
 
 
+# ElasticPlan is deprecated (PR 10): constructing one warns, pointing at
+# core.plan.fallback_chain / MeshSpec degradation.  The math stays tested
+# until the class is removed.
+
+
 def test_elastic_plan_shrinks_data_axis():
-    ep = ElasticPlan(old_shape=(16, 16), new_devices=192, axis_names=("data", "model"))
+    with pytest.warns(DeprecationWarning, match="fallback_chain"):
+        ep = ElasticPlan(old_shape=(16, 16), new_devices=192,
+                         axis_names=("data", "model"))
     assert ep.plan() == (12, 16)
     assert ep.can_restore()
 
 
 def test_elastic_plan_multipod_folds_pods():
-    ep = ElasticPlan(
-        old_shape=(2, 16, 16), new_devices=256 + 128,
-        axis_names=("pod", "data", "model"),
-    )
+    with pytest.warns(DeprecationWarning):
+        ep = ElasticPlan(
+            old_shape=(2, 16, 16), new_devices=256 + 128,
+            axis_names=("pod", "data", "model"),
+        )
     pods, data, model = ep.plan()
     assert model == 16 and pods * data * model <= 384
 
 
 def test_elastic_plan_impossible_below_tp():
-    ep = ElasticPlan(old_shape=(16, 16), new_devices=8, axis_names=("data", "model"))
+    with pytest.warns(DeprecationWarning):
+        ep = ElasticPlan(old_shape=(16, 16), new_devices=8,
+                         axis_names=("data", "model"))
     assert ep.plan() is None
     assert not ep.can_restore()

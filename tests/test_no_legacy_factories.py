@@ -59,6 +59,19 @@ PIPELINE_LOOP_CALL = re.compile(
     r"for\s+\w+\s+in\s+[^\n]*(?i:stages|pipeline|chain)[^\n]*:"
     r"\s*\n(?:[^\n]*\n){0,4}?[^\n]*\.run_(?:image|raw)\s*\("
 )
+# PR 10: serving-layer exception discipline.  A broad ``except
+# [Base]Exception`` in the runtime/serve packages may only exist where
+# the failure is ROUTED somewhere a client can observe it (a JobHandle,
+# a per-ticket failure record, a retry/fallback/quarantine path, a
+# supervised restart) -- and the line must SAY so in a trailing comment
+# naming the route.  A bare swallow hides exactly the faults the
+# resilience stack exists to surface.
+BROAD_EXCEPT = re.compile(r"except\s+(?:Base)?Exception\b[^\n]*")
+ROUTED_WORDS = re.compile(
+    r"#[^\n]*(?:handle|ticket|retr|fallback|quarantin|breaker|restart)",
+    re.IGNORECASE,
+)
+EXCEPT_SCOPES = ("src/repro/runtime", "src/repro/serve")
 
 
 def _offenders(pattern) -> list:
@@ -96,6 +109,24 @@ def test_no_bare_devices_kwarg_sites():
         "deprecated bare device-count kwarg used in production/bench "
         "code -- pass mesh=MeshSpec(app=k, rows=m) instead: "
         + ", ".join(offenders)
+    )
+
+
+def test_broad_excepts_route_to_a_client_visible_path():
+    offenders = []
+    for scope in EXCEPT_SCOPES:
+        for path in sorted((REPO / scope).rglob("*.py")):
+            text = path.read_text(encoding="utf-8")
+            for m in BROAD_EXCEPT.finditer(text):
+                if not ROUTED_WORDS.search(m.group(0)):
+                    line = text.count("\n", 0, m.start()) + 1
+                    offenders.append(f"{path.relative_to(REPO)}:{line}")
+    assert not offenders, (
+        "broad `except Exception` in the serving/runtime layers without a "
+        "routing comment -- broad catches there may only exist where the "
+        "failure reaches a client (JobHandle, per-ticket failure, retry/"
+        "fallback/quarantine, supervised restart), and the line must say "
+        "which in a trailing comment: " + ", ".join(offenders)
     )
 
 

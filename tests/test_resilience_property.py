@@ -1,0 +1,85 @@
+"""Property-based resilience tests (hypothesis): for RANDOM poison
+subsets, bisection quarantine isolates EXACTLY the poisoned tickets --
+every survivor is served bitwise-equal to the fault-free oracle, every
+poisoned ticket raises a typed QuarantinedError, never more, never fewer
+-- on both backends.  The deterministic backoff schedule is pinned as a
+pure function of its policy parameters (no jitter, monotone, capped).
+
+Deterministic twins of the core cases live in tests/test_resilience.py;
+this module is nightly/CI-only where hypothesis is installed.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sobel_grid
+from repro.runtime.chaos import FaultInjector
+from repro.runtime.fleet import FleetRequest, PixieFleet
+from repro.runtime.resilience import QuarantinedError, RetryPolicy
+
+NAMES = ["sobel_x", "sobel_y", "laplace", "sharpen", "identity", "threshold"]
+RNG = np.random.default_rng(1234)
+IMAGES = [RNG.integers(0, 256, (5 + i, 7)).astype(np.int32)
+          for i in range(len(NAMES))]
+ORACLE = {}
+
+
+def _oracle(backend):
+    if backend not in ORACLE:
+        fleet = PixieFleet(default_grid=sobel_grid(), backend=backend)
+        ORACLE[backend] = [
+            np.asarray(y) for y in fleet.run_many(
+                [FleetRequest(app=n, image=im)
+                 for n, im in zip(NAMES, IMAGES)])
+        ]
+    return ORACLE[backend]
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    poison=st.sets(st.integers(min_value=0, max_value=len(NAMES) - 1),
+                   min_size=1, max_size=len(NAMES) - 1),
+    backend=st.sampled_from(["xla", "pallas"]),
+)
+def test_bisection_isolates_exactly_the_poisoned_subset(poison, backend):
+    oracle = _oracle(backend)
+    faults = FaultInjector(seed=7).inject(
+        "dispatch", transient=False,
+        match=tuple(f"<ticket:{i}>" for i in sorted(poison)))
+    fleet = PixieFleet(default_grid=sobel_grid(), backend=backend,
+                       faults=faults, retry=RetryPolicy(max_attempts=1))
+    tickets = [fleet.submit(FleetRequest(app=n, image=im))
+               for n, im in zip(NAMES, IMAGES)]
+    fleet.flush()
+    for i, t in enumerate(tickets):
+        if i in poison:
+            with pytest.raises(QuarantinedError) as ei:
+                fleet.result(t)
+            assert ei.value.ticket == t and ei.value.app == NAMES[i]
+        else:
+            np.testing.assert_array_equal(np.asarray(fleet.result(t)),
+                                          oracle[i])
+    assert fleet.stats.quarantined_requests == len(poison)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    attempts=st.integers(min_value=1, max_value=8),
+    base_ms=st.floats(min_value=0.1, max_value=50.0),
+    mult=st.floats(min_value=1.0, max_value=4.0),
+    cap_ms=st.floats(min_value=0.1, max_value=200.0),
+)
+def test_backoff_schedule_is_pure_monotone_and_capped(attempts, base_ms,
+                                                      mult, cap_ms):
+    r = RetryPolicy(max_attempts=attempts, backoff_base_s=base_ms / 1e3,
+                    backoff_multiplier=mult, backoff_max_s=cap_ms / 1e3)
+    sched = r.schedule()
+    assert len(sched) == attempts - 1
+    assert sched == r.schedule()                      # pure: no jitter
+    assert all(b <= r.backoff_max_s + 1e-12 for b in sched)
+    assert all(b2 >= b1 - 1e-12 for b1, b2 in zip(sched, sched[1:]))
+    for i, b in enumerate(sched):
+        assert b == min(r.backoff_base_s * mult ** i, r.backoff_max_s)
